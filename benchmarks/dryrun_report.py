@@ -1,0 +1,58 @@
+"""§Dry-run report: one row per (arch × shape × mesh) from results/dryrun.
+
+Proves the distribution config is coherent: lower+compile success on the
+16×16 pod and the 2×16×16 two-pod mesh, bytes-per-device, and the compiled
+collective schedule (op counts + wire bytes).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def rows(dirname: str = "results/dryrun"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        ma = r.get("memory_analysis")
+        temp = (ma.get("temp_size_in_bytes", 0) if isinstance(ma, dict)
+                else float("nan"))
+        coll = r.get("collectives", {})
+        counts = coll.get("counts", {})
+        wire = sum(coll.get("wire_bytes", {}).values())
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "ok": r.get("ok", False),
+            "compile_s": r.get("compile_s", float("nan")),
+            "arg_gb": r.get("arg_bytes_per_device", 0) / 1e9,
+            "temp_gb": temp / 1e9,
+            "wire_gb": wire / 1e9,
+            "n_coll": sum(counts.values()),
+            "counts": counts,
+        })
+    return out
+
+
+def markdown(dirname: str = "results/dryrun") -> str:
+    hdr = ("| arch | shape | mesh | ok | compile s | args GB/dev | "
+           "temp GB/dev | collectives (AR/AG/RS/A2A/CP) | wire GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows(dirname):
+        c = r["counts"]
+        cs = "/".join(str(c.get(k, 0)) for k in
+                      ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {'✓' if r['ok'] else '✗'} | {r['compile_s']:.1f} "
+            f"| {r['arg_gb']:.2f} | {r['temp_gb']:.1f} | {cs} "
+            f"| {r['wire_gb']:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    print(markdown(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"))

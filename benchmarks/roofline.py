@@ -1,0 +1,234 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: 50 GB/s
+
+Record sources (two sweeps; see launch/dryrun.py):
+
+  * **probe** records (``--probe``): layer scans UNROLLED and ONE microbatch
+    compiled — XLA's cost_analysis counts while-loop bodies once, so scanned
+    graphs under-report FLOPs/bytes/collectives by ~layers×accum; the probe
+    restores exact counts. Terms here are scaled back up by ``accum_scale``
+    (with the optimizer's one-off bytes removed before scaling and re-added:
+    ~24 B/param/device = bf16 param r/w + fp32 m,v r/w + fp32 grad read).
+  * **deployment** records (scanned, full batch): the graph that actually
+    runs — used for the memory-fit column (peak temp + args vs 16 GB HBM).
+
+Terms per (arch × shape) cell, seconds:
+
+    compute    = probe_flops_per_device · accum / peak
+    memory     = probe_bytes_per_device(adj) · accum / hbm_bw
+    collective = probe_collective_wire_bytes_per_device · accum / link_bw
+
+plus MODEL_FLOPS/HLO_FLOPS (useful-compute ratio) and the roofline fraction
+= ideal / dominant, ideal = max(model-FLOPs term, min-arg-bytes term).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+OPT_BYTES_PER_PARAM = 24.0   # bf16 p r/w + f32 m,v r/w + f32 grad read
+
+# --------------------------------------------------------------------------
+# Analytic fused-memory model. XLA *CPU* 'bytes accessed' reflects the CPU
+# backend's (near-absent) fusion and overstates TPU HBM traffic 10-30×; the
+# spec's memory term is still reported (memory_hlo_s), but the bottleneck
+# call uses this model of what a fused TPU executable actually moves:
+#
+#   train    1.5·args  +  C_ACT·L·B_dev·S·d·2B   (residual-stream passes,
+#            C_ACT = 12: ~4 fwd + 4 remat + 4 bwd)
+#            + 6 passes over attention scores (fp32) when not flash/chunked
+#            + MoE dispatch (k·cf blow-up, 3 passes)
+#            + SSD intra-chunk decay tensors (3 passes, fp32)
+#   prefill  args + 4 passes·L·B_dev·S·d·2B + 2 passes over scores + cache
+#   decode   args (params + cache read once) + written cache slots
+# --------------------------------------------------------------------------
+def _memory_model_bytes(rec: dict, cfg, sh) -> float:
+    n_data = 16                        # batch shards on the 16×16 pod
+    n_model = 16
+    b_dev = max(sh.batch // n_data, 1)
+    args = rec.get("arg_bytes_per_device", 0.0)
+    d = cfg.d_model
+    L = cfg.num_layers if cfg.encdec is None else (
+        cfg.encdec.enc_layers + cfg.encdec.dec_layers)
+    attn_layers = sum(1 for i in range(cfg.num_layers)
+                      if cfg.layer_is_attn(i)) if cfg.encdec is None else L
+    heads_dev = max(cfg.num_heads // n_model, 1)
+    s = sh.seq if cfg.encdec is None else min(sh.seq, 4096)
+
+    def scores(sq, sk, passes):
+        if cfg.attn_impl in ("chunked", "flash"):
+            return 0.0   # online-softmax: scores never round-trip HBM
+        total = 0.0
+        for i in range(cfg.num_layers if cfg.encdec is None else 0):
+            if not cfg.layer_is_attn(i):
+                continue
+            w = cfg.layer_window(i)
+            eff = min(sk, w) if w else sk
+            total += passes * heads_dev * b_dev * sq * eff * 4.0
+        if cfg.encdec is not None:
+            total += passes * heads_dev * b_dev * sq * sk * 4.0 * L
+        return total
+
+    moe = 0.0
+    if cfg.moe is not None:
+        n_moe = sum(cfg.layer_is_moe(i) for i in range(cfg.num_layers))
+        moe = 3.0 * n_moe * cfg.moe.top_k * cfg.moe.capacity_factor \
+            * b_dev * s * d * 2.0
+    ssd = 0.0
+    if cfg.ssm is not None:
+        n_ssm = sum(not cfg.layer_is_attn(i) for i in range(cfg.num_layers))
+        d_in = cfg.ssm.expand * d
+        hh = d_in // cfg.ssm.head_dim
+        ssd = 3.0 * n_ssm * b_dev * (s // max(cfg.ssm.chunk, 1) + 1) \
+            * cfg.ssm.chunk ** 2 * hh * 4.0
+
+    if sh.kind == "train":
+        act = 12.0 * L * b_dev * s * d * 2.0
+        return 1.5 * args + act + scores(s, s, 6) + 2 * moe + 2 * ssd
+    if sh.kind == "prefill":
+        act = 4.0 * L * b_dev * s * d * 2.0
+        return args + act + scores(s, s, 2) + moe + ssd
+    # decode: params + cache read once; tiny activations
+    return args + 4.0 * L * b_dev * d * 2.0
+
+
+def analyze_record(rec: dict, deploy: dict | None = None) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    ca = rec.get("cost_analysis")
+    if not isinstance(ca, dict) or "flops" not in ca:
+        return None
+    n = rec["n_devices"]
+    accum = rec.get("accum_scale", 1) or 1
+    flops_dev = ca["flops"] * accum
+    bytes_dev = ca.get("bytes accessed", 0.0)
+    if accum > 1:
+        # optimizer traffic happens once per step, not per microbatch
+        opt_bytes = OPT_BYTES_PER_PARAM * rec.get("param_count", 0) / n
+        bytes_dev = max(bytes_dev - opt_bytes, 0.0) * accum + opt_bytes
+    coll = rec.get("collectives", {})
+    wire_dev = sum(coll.get("wire_bytes", {}).values()) * accum
+    operand_dev = sum(coll.get("operand_bytes", {}).values()) * accum
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_hlo_s = bytes_dev / HBM_BW
+    try:
+        import dataclasses as _dc
+        import sys, os as _os
+        sys.path.insert(0, _os.path.join(_os.path.dirname(__file__),
+                                         _os.pardir, "src"))
+        from repro import configs as _configs
+        from repro.launch import shapes as _shapes
+        cfg = _configs.get(rec["arch"])
+        ov = {k: v for k, v in (rec.get("overrides") or {}).items()
+              if k not in ("unroll", "grad_accum")}
+        if ov:
+            cfg = _dc.replace(cfg, **ov)
+        sh = _shapes.SHAPES[rec["shape"]]
+        memory_s = _memory_model_bytes(rec, cfg, sh) / HBM_BW
+    except Exception:
+        memory_s = memory_hlo_s
+    collective_s = wire_dev / LINK_BW
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)], key=lambda kv: kv[1])
+
+    model_flops = rec.get("model_flops_global", 0.0)
+    useful_ratio = model_flops / (flops_dev * n) if flops_dev else 0.0
+
+    ideal_compute = model_flops / (n * PEAK_FLOPS)
+    src = deploy or rec
+    min_bytes_dev = src.get("arg_bytes_per_device", 0.0)
+    ideal = max(ideal_compute, min_bytes_dev / HBM_BW)
+    fraction = ideal / dominant[1] if dominant[1] > 0 else 0.0
+
+    ma = (deploy or {}).get("memory_analysis") or rec.get("memory_analysis")
+    temp_gb = (ma.get("temp_size_in_bytes", 0) / 1e9
+               if isinstance(ma, dict) else float("nan"))
+    arg_gb = src.get("arg_bytes_per_device", 0) / 1e9
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_hlo_s": memory_hlo_s,
+        "collective_s": collective_s,
+        "collective_operand_s": operand_dev / LINK_BW,
+        "dominant": dominant[0],
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": fraction,
+        "ideal_s": ideal,
+        "temp_gb_per_device": temp_gb,
+        "arg_gb_per_device": arg_gb,
+        "fits_hbm16": (temp_gb + arg_gb) <= 16.0,
+    }
+
+
+def load_records(dirname: str) -> dict:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        out[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return out
+
+
+def load_all(probe_dir: str = "results/probe",
+             deploy_dir: str = "results/dryrun") -> list[dict]:
+    probes = load_records(probe_dir)
+    deploys = load_records(deploy_dir)
+    rows = []
+    for key, rec in sorted(probes.items()):
+        row = analyze_record(rec, deploy=deploys.get(key))
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s (model) | memory s (HLO) "
+           "| collective s | dominant | useful FLOPs | roofline frac "
+           "| temp+arg GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['memory_hlo_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['temp_gb_per_device'] + r['arg_gb_per_device']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--probe-dir", default="results/probe")
+    ap.add_argument("--deploy-dir", default="results/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load_all(args.probe_dir, args.deploy_dir)
+    if args.csv:
+        for r in rows:
+            print(f"roofline_{r['arch']}_{r['shape']}"
+                  f"{('_' + r['tag']) if r['tag'] and r['tag'] != 'probe' else ''},"
+                  f"{r['compute_s']*1e6:.1f},"
+                  f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+                  f"mem_us={r['memory_s']*1e6:.1f};"
+                  f"coll_us={r['collective_s']*1e6:.1f}")
+    else:
+        print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  bench_cumulative_runtime  — paper Fig. 5 / Fig. 9(a,b,e,f): cumulative
+      runtime over 10 iterations for each workflow under OPT / AM / NM
+      (NM ≈ KeystoneML's materialize-nothing; AM ≈ DeepDive's
+      materialize-everything).
+  bench_storage             — paper Fig. 9(c,d): store size after the runs.
+  bench_state_fractions     — paper Fig. 8: prune/load/compute fractions,
+      OPT vs AM (OPT should match AM's reuse without AM's storage).
+  bench_optimizer_overhead  — OEP max-flow solve time vs DAG size (the
+      optimizer must be negligible next to operator runtimes).
+
+Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from repro.core import IterativeSession, Policy  # noqa: E402
+from repro.core.dag import DAG, Node             # noqa: E402
+from repro.core import oep                       # noqa: E402
+
+import workflows as W                            # noqa: E402
+
+N_ITERS = int(os.environ.get("HELIX_BENCH_ITERS", "10"))
+SELECT = os.environ.get("HELIX_BENCH_WORKFLOWS", "census,genomics,nlp,mnist"
+                        ).split(",")
+BUDGET = 10 * 1024 ** 3    # paper §6.3: 10 GB storage budget
+ROOT = os.path.join(os.path.dirname(__file__), os.pardir,
+                    "results", "bench")
+
+
+def _run_policy(wd: W.WorkflowDef, policy: Policy, seed: int = 0):
+    """Run N_ITERS iterations; returns (per-iter seconds, reports)."""
+    workdir = os.path.join(ROOT, f"{wd.name}_{policy.value}")
+    shutil.rmtree(workdir, ignore_errors=True)
+    sess = IterativeSession(workdir, policy=policy,
+                            storage_budget_bytes=BUDGET)
+    knobs = W.iteration_schedule(wd, N_ITERS, seed)
+    times, reports = [], []
+    for kn in knobs:
+        wf = wd.build(kn)
+        t0 = time.perf_counter()
+        rep = sess.run(wf)
+        times.append(time.perf_counter() - t0)
+        reports.append(rep)
+    return times, reports
+
+
+_CACHE: dict = {}
+
+
+def _results(wd: W.WorkflowDef, policy: Policy):
+    key = (wd.name, policy)
+    if key not in _CACHE:
+        _CACHE[key] = _run_policy(wd, policy)
+    return _CACHE[key]
+
+
+def bench_cumulative_runtime() -> None:
+    """Fig. 5 / 9: cumulative runtime per workflow per policy."""
+    for name in SELECT:
+        wd = W.WORKFLOWS[name]
+        cum = {}
+        for policy in (Policy.NEVER, Policy.ALWAYS, Policy.OPT):
+            times, _ = _results(wd, policy)
+            cum[policy] = sum(times)
+        for policy, total in cum.items():
+            speedup = cum[Policy.NEVER] / max(total, 1e-9)
+            print(f"{name}_{policy.value}_cumulative,"
+                  f"{total * 1e6 / N_ITERS:.0f},"
+                  f"total_s={total:.2f};speedup_vs_nm={speedup:.2f}x",
+                  flush=True)
+
+
+def bench_storage() -> None:
+    """Fig. 9(c,d): storage snapshots."""
+    for name in SELECT:
+        wd = W.WORKFLOWS[name]
+        for policy in (Policy.ALWAYS, Policy.OPT):
+            _, reports = _results(wd, policy)
+            final = reports[-1].store_bytes
+            peak = max(r.store_bytes for r in reports)
+            print(f"{name}_{policy.value}_storage,"
+                  f"{final / 1024:.0f},"
+                  f"peak_kb={peak / 1024:.0f}", flush=True)
+
+
+def bench_state_fractions() -> None:
+    """Fig. 8: aggregate state distribution across reuse iterations."""
+    for name in SELECT:
+        wd = W.WORKFLOWS[name]
+        for policy in (Policy.OPT, Policy.ALWAYS):
+            _, reports = _results(wd, policy)
+            comp = sum(r.execution.n_computed for r in reports[1:])
+            load = sum(r.execution.n_loaded for r in reports[1:])
+            prune = sum(r.execution.n_pruned for r in reports[1:])
+            tot = max(comp + load + prune, 1)
+            print(f"{name}_{policy.value}_states,"
+                  f"{comp},"
+                  f"compute={comp / tot:.2f};load={load / tot:.2f};"
+                  f"prune={prune / tot:.2f}", flush=True)
+
+
+def bench_optimizer_overhead() -> None:
+    """OEP (max-flow) solve time vs DAG size."""
+    rng = np.random.default_rng(0)
+    for n in (50, 200, 1000):
+        nodes = []
+        for i in range(n):
+            k = int(min(i, 3))
+            parents = tuple(f"n{j}" for j in
+                            rng.choice(i, k, replace=False)) if i else ()
+            nodes.append(Node(name=f"n{i}", fn=None, parents=parents,
+                              is_output=(i == n - 1)))
+        dag = DAG(nodes)
+        cc = {f"n{i}": float(rng.uniform(0.1, 10)) for i in range(n)}
+        lc = {f"n{i}": (float(rng.uniform(0.1, 5))
+                        if rng.random() < 0.7 else None) for i in range(n)}
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            oep.plan(dag, cc, lc, original=set())
+        dt = (time.perf_counter() - t0) / reps
+        print(f"oep_solver_n{n},{dt * 1e6:.0f},nodes={n}", flush=True)
+
+
+def main() -> None:
+    bench_cumulative_runtime()
+    bench_storage()
+    bench_state_fractions()
+    bench_optimizer_overhead()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch internlm2-1.8b
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m  # SSM cache
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro.launch import serve as serve_mod  # noqa: E402
+
+if __name__ == "__main__":
+    sys.argv[0] = "serve"
+    serve_mod.main()

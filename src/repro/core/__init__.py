@@ -1,0 +1,26 @@
+# The paper's primary contribution — the Helix iterative-execution optimizer
+# as a composable library: Workflow DAG + change tracking (signatures) +
+# OPT-EXEC-PLAN (max-flow) + OPT-MAT-PLAN (streaming heuristic) + the
+# execution engine with a content-addressed, reshard-on-load store.
+from .dag import DAG, Kind, Node, State, validate_states
+from .signature import compute_signatures, source_version
+from .oep import plan, plan_runtime, brute_force_plan
+from .omp import Materializer, Policy, cumulative_runtime
+from .store import Store, tree_nbytes
+from .costs import CostModel
+from .executor import ExecutionReport, execute
+from .workflow import Ref, Workflow
+from .pruning import slice_from_outputs, zero_weight_extractors
+from .session import IterationReport, IterativeSession
+
+__all__ = [
+    "DAG", "Kind", "Node", "State", "validate_states",
+    "compute_signatures", "source_version",
+    "plan", "plan_runtime", "brute_force_plan",
+    "Materializer", "Policy", "cumulative_runtime",
+    "Store", "tree_nbytes", "CostModel",
+    "ExecutionReport", "execute",
+    "Ref", "Workflow",
+    "slice_from_outputs", "zero_weight_extractors",
+    "IterationReport", "IterativeSession",
+]

@@ -1,0 +1,65 @@
+"""Operator cost statistics (paper §5.1 "Operator Metrics").
+
+``c_i`` (compute seconds) is measured at execution and keyed by the node's
+*signature*: if a node has been run before under the same signature, the
+recorded statistic is exact, which is the paper's assumption ("we would have
+run the exact same operator before and recorded accurate c_i and l_i").
+
+Beyond-paper: for *never-seen* nodes the paper has a cold-start problem (it
+must compute them anyway by Constraint 1, but OMP and downstream planning
+still want estimates). We allow a ``cost_hint`` (e.g. derived from a compiled
+dry-run's roofline terms: max(flops/peak, bytes/bw)) as a prior.
+
+Statistics persist to JSON so sessions survive process restarts — that is
+what turns checkpoint/restart into plain Helix reuse.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+
+class CostModel:
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self.compute_s: dict[str, float] = {}
+        self.nbytes: dict[str, float] = {}
+        self.seen: set[str] = set()
+        if os.path.exists(path):
+            with open(path) as f:
+                blob = json.load(f)
+            self.compute_s = blob.get("compute_s", {})
+            self.nbytes = blob.get("nbytes", {})
+            self.seen = set(blob.get("seen", []))
+
+    def save(self) -> None:
+        with self._lock:
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"compute_s": self.compute_s,
+                           "nbytes": self.nbytes,
+                           "seen": sorted(self.seen)}, f)
+            os.replace(tmp, self.path)
+
+    # -- recording -------------------------------------------------------------
+    def record(self, sig: str, compute_seconds: float | None = None,
+               nbytes: float | None = None) -> None:
+        if compute_seconds is not None:
+            self.compute_s[sig] = compute_seconds
+        if nbytes is not None:
+            self.nbytes[sig] = nbytes
+        self.seen.add(sig)
+
+    # -- queries ---------------------------------------------------------------
+    def compute_cost(self, sig: str, hint: float | None = None,
+                     default: float = 1.0) -> float:
+        if sig in self.compute_s:
+            return self.compute_s[sig]
+        if hint is not None:
+            return hint
+        return default
+
+    def is_original(self, sig: str) -> bool:
+        return sig not in self.seen

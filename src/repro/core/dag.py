@@ -1,0 +1,138 @@
+"""Workflow DAG — the paper's central abstraction (§4.1, Def. 1).
+
+Nodes correspond to *operator outputs*; edges to input→output relationships.
+Each node carries the callable that produces its output from its parents'
+outputs, plus the metadata the optimizer needs (version string for change
+tracking, determinism flag, output flag).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Mapping, Sequence
+
+
+class State(enum.Enum):
+    """Execution state assignment (paper §5.1): compute / load / prune."""
+
+    COMPUTE = "compute"
+    LOAD = "load"
+    PRUNE = "prune"
+
+
+class Kind(enum.Enum):
+    """Operator kinds mirroring the HML interfaces (paper §3.2.2)."""
+
+    SOURCE = "source"          # data source (root; l_i == c_i in the paper)
+    SCANNER = "scanner"        # parsing / flatMap
+    EXTRACTOR = "extractor"    # feature extraction / transformation
+    SYNTHESIZER = "synthesizer"  # join / example assembly
+    LEARNER = "learner"        # learning + inference
+    REDUCER = "reducer"        # PPR reduce
+    SEGMENT = "segment"        # a training segment (N optimizer steps) — the
+                               # unit of fault-tolerant reuse in Helix-JAX
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """A single operator output in the Workflow DAG."""
+
+    name: str
+    fn: Callable[..., Any]
+    parents: tuple[str, ...] = ()
+    kind: Kind = Kind.EXTRACTOR
+    # ``version`` participates in the signature: editing an operator between
+    # iterations means giving it a new version (the DSL hashes source/config).
+    version: str = "0"
+    # Nondeterministic operators (e.g. unseeded random featurization, as in
+    # the paper's MNIST workflow) can never be reused across iterations.
+    deterministic: bool = True
+    # Mandatory output (HML ``is_output``): must not be pruned and is always
+    # materialized by the executor.
+    is_output: bool = False
+    # Optional a-priori compute-cost estimate in seconds (e.g. derived from a
+    # dry-run roofline) used when no measured statistics exist yet.
+    cost_hint: float | None = None
+
+
+class DAG:
+    """An immutable-ish DAG of :class:`Node` keyed by name."""
+
+    def __init__(self, nodes: Sequence[Node]):
+        self.nodes: dict[str, Node] = {}
+        for n in nodes:
+            if n.name in self.nodes:
+                raise ValueError(f"duplicate node name: {n.name}")
+            self.nodes[n.name] = n
+        for n in nodes:
+            for p in n.parents:
+                if p not in self.nodes:
+                    raise ValueError(f"{n.name}: unknown parent {p!r}")
+        self._children: dict[str, list[str]] = {k: [] for k in self.nodes}
+        for n in nodes:
+            for p in n.parents:
+                self._children[p].append(n.name)
+        self._order = self._toposort()
+
+    # -- structure ---------------------------------------------------------
+    def children(self, name: str) -> list[str]:
+        return self._children[name]
+
+    def parents(self, name: str) -> tuple[str, ...]:
+        return self.nodes[name].parents
+
+    def topological(self) -> list[str]:
+        return list(self._order)
+
+    def ancestors(self, name: str) -> set[str]:
+        out: set[str] = set()
+        stack = list(self.nodes[name].parents)
+        while stack:
+            cur = stack.pop()
+            if cur not in out:
+                out.add(cur)
+                stack.extend(self.nodes[cur].parents)
+        return out
+
+    def outputs(self) -> list[str]:
+        return [n.name for n in self.nodes.values() if n.is_output]
+
+    def subgraph(self, keep: set[str]) -> "DAG":
+        return DAG([self.nodes[k] for k in self._order if k in keep])
+
+    def _toposort(self) -> list[str]:
+        indeg = {k: len(n.parents) for k, n in self.nodes.items()}
+        # Deterministic order: seed with insertion order.
+        ready = [k for k in self.nodes if indeg[k] == 0]
+        order: list[str] = []
+        while ready:
+            cur = ready.pop(0)
+            order.append(cur)
+            for ch in self._children[cur]:
+                indeg[ch] -= 1
+                if indeg[ch] == 0:
+                    ready.append(ch)
+        if len(order) != len(self.nodes):
+            raise ValueError("cycle detected in workflow DAG")
+        return order
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.nodes
+
+
+def validate_states(dag: DAG, states: Mapping[str, State]) -> None:
+    """Check Constraint 2 (computed node's parents not pruned) and that
+    mandatory outputs are not pruned. Raises ``ValueError`` on violation."""
+    for name, node in dag.nodes.items():
+        s = states[name]
+        if s is State.COMPUTE:
+            for p in node.parents:
+                if states[p] is State.PRUNE:
+                    raise ValueError(
+                        f"Constraint 2 violated: {name} computed but parent "
+                        f"{p} pruned")
+        if node.is_output and s is State.PRUNE:
+            raise ValueError(f"output node {name} pruned")

@@ -1,0 +1,144 @@
+"""Execution engine (paper §2.1 component 3 + §5.3 streaming discipline).
+
+Executes a planned DAG in topological order:
+
+* LOAD nodes read their value from the store (optionally placing array
+  leaves directly onto the current mesh with a caller-supplied sharding —
+  the elastic-restart path).
+* COMPUTE nodes call ``node.fn(*parent_values)``; jax arrays in the result
+  are blocked on so measured runtimes are honest.
+* PRUNE nodes are skipped entirely.
+
+Out-of-scope detection (Def. 5 / Constraint 3): when the last non-pruned
+child of a node has been produced, the node immediately gets a
+materialization decision from the :class:`Materializer` and is then evicted
+from the in-memory cache (the paper's eager cache pruning, transposed here to
+freeing host/HBM memory). Mandatory outputs are kept and returned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping
+
+import jax
+
+from .dag import DAG, State
+from .omp import Materializer
+from .store import Store, tree_nbytes
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    states: dict[str, State]
+    runtime: dict[str, float]            # realized per-node seconds (c or l)
+    materialized: dict[str, str]         # name -> reason
+    skipped_mat: dict[str, str]          # name -> reason
+    mat_seconds: float                   # total time spent writing (sync path)
+    total_seconds: float                 # wall clock of execute()
+    outputs: dict[str, Any]
+
+    @property
+    def n_computed(self) -> int:
+        return sum(1 for s in self.states.values() if s is State.COMPUTE)
+
+    @property
+    def n_loaded(self) -> int:
+        return sum(1 for s in self.states.values() if s is State.LOAD)
+
+    @property
+    def n_pruned(self) -> int:
+        return sum(1 for s in self.states.values() if s is State.PRUNE)
+
+
+def _block(value: Any) -> Any:
+    for leaf in jax.tree_util.tree_leaves(value):
+        if isinstance(leaf, jax.Array):
+            leaf.block_until_ready()
+    return value
+
+
+def execute(dag: DAG,
+            sigs: Mapping[str, str],
+            states: Mapping[str, State],
+            store: Store,
+            materializer: Materializer,
+            load_shardings: Mapping[str, Callable] | None = None,
+            async_materialization: bool = False) -> ExecutionReport:
+    t_start = time.perf_counter()
+    cache: dict[str, Any] = {}
+    runtime: dict[str, float] = {}
+    materialized: dict[str, str] = {}
+    skipped: dict[str, str] = {}
+    mat_seconds = 0.0
+    pending_threads = []
+    load_shardings = load_shardings or {}
+
+    # Remaining non-pruned consumers per node (for out-of-scope detection).
+    remaining = {
+        name: sum(1 for ch in dag.children(name)
+                  if states[ch] is State.COMPUTE)
+        for name in dag.nodes
+    }
+
+    def handle_out_of_scope(name: str) -> None:
+        nonlocal mat_seconds
+        node = dag.nodes[name]
+        if states[name] is State.PRUNE:
+            return
+        value = cache.get(name)
+        already = store.has(sigs[name])
+        if already:
+            skipped[name] = "already materialized"
+        else:
+            est_bytes = tree_nbytes(value)
+            est_load = store.est_load_seconds(est_bytes)
+            decision = materializer.decide(
+                dag, name, states, runtime, est_load, est_bytes)
+            if decision.materialize:
+                if async_materialization:
+                    pending_threads.append(
+                        store.save_async(sigs[name], name, value))
+                else:
+                    info = store.save(sigs[name], name, value)
+                    mat_seconds += info.seconds
+                materialized[name] = decision.reason
+            else:
+                skipped[name] = decision.reason
+        if not node.is_output:
+            cache.pop(name, None)  # eager eviction (§5.4 cache pruning)
+
+    for name in dag.topological():
+        state = states[name]
+        node = dag.nodes[name]
+        if state is State.PRUNE:
+            continue
+        if state is State.LOAD:
+            value, secs = store.load(sigs[name],
+                                     sharding_for_leaf=load_shardings.get(name))
+            _block(value)
+        else:  # COMPUTE
+            args = [cache[p] for p in node.parents]
+            t0 = time.perf_counter()
+            value = _block(node.fn(*args))
+            secs = time.perf_counter() - t0
+        cache[name] = value
+        runtime[name] = secs
+        # Out-of-scope bookkeeping: this node consumed its parents…
+        if state is State.COMPUTE:
+            for p in node.parents:
+                remaining[p] -= 1
+                if remaining[p] == 0:
+                    handle_out_of_scope(p)
+        # …and may itself already have no live consumers.
+        if remaining[name] == 0:
+            handle_out_of_scope(name)
+
+    for th in pending_threads:
+        th.join()
+
+    outputs = {n: cache[n] for n in dag.outputs() if n in cache}
+    return ExecutionReport(
+        states=dict(states), runtime=runtime, materialized=materialized,
+        skipped_mat=skipped, mat_seconds=mat_seconds,
+        total_seconds=time.perf_counter() - t_start, outputs=outputs)

@@ -1,0 +1,99 @@
+"""OPT-MAT-PLAN (paper §5.3) — what to materialize while executing.
+
+The exact problem is NP-hard (Knapsack reduction, Appendix C). Helix uses a
+streaming heuristic (Algorithm 2): when a node goes *out of scope* (all
+children computed/loaded; Constraint 3), materialize it iff
+
+    2 · l_i  <  C(n_i)
+
+where C(n_i) is the *cumulative runtime* (Def. 6): the node's own runtime
+under its execution state plus the runtime of all its ancestors. Intuition:
+materializing now (≈ l_i) plus loading later (≈ l_i) must beat recomputing
+the chain.
+
+We add the paper's storage budget S (skip materialization that would exceed
+it) and two baseline policies used in the paper's evaluation (§6.6):
+ALWAYS (≈ DeepDive) and NEVER (≈ KeystoneML).
+
+Beyond-paper option: ``horizon`` amortizes the payoff over an expected number
+of future reuse iterations (the paper explicitly defers this amortization
+model to future work): materialize iff (1 + 1/horizon)·l_i < C(n_i)/1 …
+i.e. with horizon→∞ the threshold approaches l_i < C(n_i).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Mapping
+
+from .dag import DAG, State
+
+
+class Policy(enum.Enum):
+    OPT = "opt"        # Algorithm 2
+    ALWAYS = "always"  # Helix AM
+    NEVER = "never"    # Helix NM
+
+
+@dataclasses.dataclass
+class MatDecision:
+    materialize: bool
+    reason: str
+
+
+def cumulative_runtime(dag: DAG, name: str,
+                       states: Mapping[str, State],
+                       runtime: Mapping[str, float]) -> float:
+    """C(n_i) per Def. 6: t(n_i) + Σ_{ancestors} t(n_j), where t() is the
+    realized runtime of the node under its state (0 for pruned)."""
+    total = runtime.get(name, 0.0)
+    for anc in dag.ancestors(name):
+        total += runtime.get(anc, 0.0)
+    return total
+
+
+@dataclasses.dataclass
+class Materializer:
+    """Streaming materialization decisions under a storage budget."""
+
+    policy: Policy = Policy.OPT
+    storage_budget_bytes: float = float("inf")
+    used_bytes: float = 0.0
+    horizon: float = 1.0  # expected future iterations a node stays reusable
+
+    def decide(self, dag: DAG, name: str,
+               states: Mapping[str, State],
+               runtime: Mapping[str, float],
+               est_load_seconds: float,
+               est_bytes: float) -> MatDecision:
+        node = dag.nodes[name]
+        if node.is_output:
+            # Mandatory outputs are always persisted (HML ``is_output``).
+            return self._budgeted(est_bytes, "mandatory output")
+        if self.policy is Policy.NEVER:
+            return MatDecision(False, "policy NM")
+        if self.policy is Policy.ALWAYS:
+            # Paper's DeepDive-style AM: materializes *everything*, even
+            # never-reusable nondeterministic outputs (§6.6 — the wasted
+            # writes are exactly why AM loses on MNIST/NLP).
+            return self._budgeted(est_bytes, "policy AM")
+        if not node.deterministic:
+            return MatDecision(False, "nondeterministic: never reusable")
+        # Algorithm 2 with amortization horizon (horizon=1 == paper).
+        c_cum = cumulative_runtime(dag, name, states, runtime)
+        threshold = (1.0 + 1.0 / max(self.horizon, 1e-9)) * est_load_seconds
+        if threshold < c_cum:
+            return self._budgeted(
+                est_bytes, f"2·l={threshold:.3g} < C={c_cum:.3g}")
+        return MatDecision(False,
+                           f"2·l={threshold:.3g} >= C={c_cum:.3g}")
+
+    def _budgeted(self, est_bytes: float, reason: str) -> MatDecision:
+        if self.used_bytes + est_bytes > self.storage_budget_bytes:
+            return MatDecision(False, f"{reason}; storage budget exhausted")
+        self.used_bytes += est_bytes
+        return MatDecision(True, reason)
+
+    def release(self, nbytes: float) -> None:
+        """Credit back storage freed by purging stale materializations."""
+        self.used_bytes = max(0.0, self.used_bytes - nbytes)

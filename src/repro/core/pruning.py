@@ -1,0 +1,43 @@
+"""Workflow DAG pruning (paper §5.4).
+
+* ``slice_from_outputs`` — program slicing: keep only ancestors of outputs
+  (plus explicit ``uses`` dependencies, which the DSL already encodes as
+  edges). The raceExt example in the paper's Fig. 3 is pruned this way.
+* ``zero_weight_extractors`` — data-driven pruning: given a trained linear
+  model's weights and per-feature provenance (which extractor produced each
+  feature column), report extractors whose every feature has |w| below
+  tolerance; these can be dropped in the next iteration without changing
+  predictions.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .dag import DAG
+
+
+def slice_from_outputs(dag: DAG) -> set[str]:
+    keep: set[str] = set()
+    stack = list(dag.outputs())
+    while stack:
+        cur = stack.pop()
+        if cur in keep:
+            continue
+        keep.add(cur)
+        stack.extend(dag.nodes[cur].parents)
+    return keep
+
+
+def zero_weight_extractors(weights: np.ndarray,
+                           provenance: Mapping[str, Sequence[int]],
+                           tol: float = 1e-8) -> set[str]:
+    """Extractors whose features all have |weight| < tol (prunable)."""
+    w = np.asarray(weights).reshape(-1)
+    prunable = set()
+    for extractor, cols in provenance.items():
+        cols = list(cols)
+        if cols and np.all(np.abs(w[cols]) < tol):
+            prunable.add(extractor)
+    return prunable

@@ -1,0 +1,126 @@
+"""IterativeSession — the workflow lifecycle driver (paper §2.2, Fig. 2).
+
+    W_t ──compile──▶ DAG ──slice──▶ sliced DAG
+        ──signatures/diff──▶ original set + equivalent materializations
+        ──OEP (max-flow)──▶ states {compute, load, prune}
+        ──execute + OMP──▶ results, selective materialization
+        ──record stats──▶ cost model (persisted)
+
+Because signatures, cost statistics, and the store all persist on disk, a
+*process restart* is indistinguishable from the next iteration of the same
+workflow: completed work is equivalent → loaded; in-flight work is original →
+recomputed. That is the fault-tolerance story at pod scale, and Theorem 1
+gives its correctness argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Mapping
+
+from .costs import CostModel
+from .dag import DAG, Kind, State
+from .executor import ExecutionReport, execute
+from .omp import Materializer, Policy
+from .oep import plan
+from .pruning import slice_from_outputs
+from .signature import compute_signatures
+from .store import Store
+from .workflow import Workflow
+
+
+@dataclasses.dataclass
+class IterationReport:
+    execution: ExecutionReport
+    sigs: dict[str, str]
+    original: set[str]
+    sliced_away: set[str]
+    store_bytes: int
+    purged_bytes: int
+
+    @property
+    def outputs(self) -> dict[str, Any]:
+        return self.execution.outputs
+
+    @property
+    def total_seconds(self) -> float:
+        return self.execution.total_seconds
+
+
+class IterativeSession:
+    def __init__(self, workdir: str,
+                 policy: Policy = Policy.OPT,
+                 storage_budget_bytes: float = float("inf"),
+                 async_materialization: bool = False,
+                 horizon: float = 1.0):
+        os.makedirs(workdir, exist_ok=True)
+        self.workdir = workdir
+        self.store = Store(os.path.join(workdir, "store"))
+        self.cost_model = CostModel(os.path.join(workdir, "costs.json"))
+        self.materializer = Materializer(
+            policy=policy, storage_budget_bytes=storage_budget_bytes,
+            horizon=horizon)
+        self.materializer.used_bytes = float(self.store.total_bytes())
+        self.async_materialization = async_materialization
+        self.iteration = 0
+
+    # ------------------------------------------------------------------------------
+    def run(self, workflow: Workflow,
+            load_shardings: Mapping[str, Callable] | None = None
+            ) -> IterationReport:
+        dag = workflow.build()
+        sigs = compute_signatures(dag)
+
+        # §5.4 program slicing.
+        keep = slice_from_outputs(dag)
+        sliced = dag.subgraph(keep)
+
+        # §4.2 change tracking: original ⇔ signature never seen before.
+        original = {n for n in sliced.topological()
+                    if self.cost_model.is_original(sigs[n])}
+
+        # §5.1 operator metrics.
+        compute_cost: dict[str, float] = {}
+        load_cost: dict[str, float | None] = {}
+        for n in sliced.topological():
+            node = sliced.nodes[n]
+            compute_cost[n] = self.cost_model.compute_cost(
+                sigs[n], hint=node.cost_hint)
+            if self.store.has(sigs[n]):
+                meta = self.store.meta(sigs[n])
+                load_cost[n] = self.store.est_load_seconds(meta["nbytes"])
+            else:
+                load_cost[n] = None
+
+        # §5.2 OEP via max-flow.
+        states = plan(sliced, compute_cost, load_cost, original)
+
+        # Purge stale materializations of original operators (§6.6: "Helix
+        # purges any previous materialization of original operators prior to
+        # execution").
+        purged = 0
+        by_name = self.store.sigs_by_name()
+        for n in original:
+            for old_sig in by_name.get(n, []):
+                if old_sig != sigs[n]:
+                    purged += self.store.delete(old_sig)
+        self.materializer.release(purged)
+
+        report = execute(
+            sliced, sigs, states, self.store, self.materializer,
+            load_shardings=load_shardings,
+            async_materialization=self.async_materialization)
+
+        # Record statistics for future iterations.
+        for n, secs in report.runtime.items():
+            if states[n] is State.COMPUTE:
+                self.cost_model.record(sigs[n], compute_seconds=secs)
+            else:
+                self.cost_model.record(sigs[n])
+        self.cost_model.save()
+        self.iteration += 1
+
+        return IterationReport(
+            execution=report, sigs=sigs, original=original,
+            sliced_away=set(dag.nodes) - keep,
+            store_bytes=self.store.total_bytes(), purged_bytes=purged)

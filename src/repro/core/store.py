@@ -1,0 +1,229 @@
+"""Content-addressed materialization store (paper's "materialization
+operator" + Helix-JAX's distributed checkpoint substrate).
+
+Entries are keyed by the node's *signature* (see signature.py), so a lookup
+hit is exactly the paper's "equivalent materialization" (Def. 3). Values are
+arbitrary pytrees whose array leaves may be sharded ``jax.Array``s.
+
+Array leaves are persisted as ``.npy`` and reloaded with
+``jax.make_array_from_callback`` against a **target sharding**, reading only
+the slices each device needs (``np.load(mmap_mode='r')``). That means a value
+materialized under mesh A can be restored under mesh B — the elastic-restart
+path. Non-array leaves are pickled.
+
+The store records measured save/load wall-times and byte sizes per entry;
+these feed the cost model's ``l_i`` estimates (paper §5.1: l_i =
+bytes / store bandwidth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+import shutil
+import threading
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+
+
+@dataclasses.dataclass
+class SaveInfo:
+    nbytes: int
+    seconds: float
+
+
+def _leaf_to_host(leaf: Any) -> Any:
+    if isinstance(leaf, jax.Array):
+        return np.asarray(jax.device_get(leaf))
+    return leaf
+
+
+def tree_nbytes(value: Any) -> int:
+    """Pre-save storage estimate for a pytree (used by OMP's budget)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(value):
+        if isinstance(leaf, (jax.Array, np.ndarray)):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        else:
+            total += 64  # nominal
+    return total
+
+
+class Store:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+        # measured aggregate write bandwidth (bytes/s), EWMA
+        self._bw_write: float | None = None
+        self._bw_read: float | None = None
+
+    # -- paths ---------------------------------------------------------------
+    def _dir(self, sig: str) -> str:
+        return os.path.join(self.root, sig[:2], sig)
+
+    def has(self, sig: str) -> bool:
+        return os.path.exists(os.path.join(self._dir(sig), "meta.json"))
+
+    # -- save ------------------------------------------------------------------
+    def save(self, sig: str, name: str, value: Any,
+             extra_meta: dict | None = None) -> SaveInfo:
+        t0 = time.perf_counter()
+        host_value = jax.tree_util.tree_map(_leaf_to_host, value)
+        d = self._dir(sig)
+        tmp = d + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        leaves, treedef = jax.tree_util.tree_flatten(host_value)
+        manifest = []
+        nbytes = 0
+        for i, leaf in enumerate(leaves):
+            if isinstance(leaf, np.ndarray):
+                fn = f"leaf_{i}.npy"
+                logical = str(leaf.dtype)
+                to_save = leaf
+                if leaf.dtype.kind not in "biufc":  # ml_dtypes (bf16, fp8…)
+                    to_save = leaf.view(
+                        {1: np.uint8, 2: np.uint16, 4: np.uint32}[
+                            leaf.dtype.itemsize])
+                np.save(os.path.join(tmp, fn), to_save, allow_pickle=False)
+                manifest.append({"kind": "array", "file": fn,
+                                 "shape": list(leaf.shape),
+                                 "dtype": logical})
+                nbytes += leaf.nbytes
+            else:
+                fn = f"leaf_{i}.pkl"
+                with open(os.path.join(tmp, fn), "wb") as f:
+                    pickle.dump(leaf, f)
+                manifest.append({"kind": "pickle", "file": fn})
+                nbytes += os.path.getsize(os.path.join(tmp, fn))
+        with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
+            pickle.dump(treedef, f)
+        seconds = time.perf_counter() - t0
+        meta = {
+            "name": name, "sig": sig, "nbytes": nbytes,
+            "save_seconds": seconds, "created": time.time(),
+            "manifest": manifest,
+        }
+        meta.update(extra_meta or {})
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        with self._lock:
+            if os.path.exists(d):
+                shutil.rmtree(d)
+            os.rename(tmp, d)
+            self._update_bw("_bw_write", nbytes, seconds)
+        return SaveInfo(nbytes=nbytes, seconds=seconds)
+
+    def save_async(self, sig: str, name: str, value: Any,
+                   extra_meta: dict | None = None) -> threading.Thread:
+        """Overlapped materialization: snapshot to host synchronously (the
+        cheap part), write to disk on a worker thread. The paper materializes
+        synchronously; this removes the write from the critical path."""
+        host_value = jax.tree_util.tree_map(_leaf_to_host, value)
+        th = threading.Thread(
+            target=self.save, args=(sig, name, host_value),
+            kwargs={"extra_meta": extra_meta}, daemon=True)
+        th.start()
+        return th
+
+    # -- load ------------------------------------------------------------------
+    def load(self, sig: str,
+             sharding_for_leaf: Callable[[int, tuple, np.dtype], Any] | None = None
+             ) -> tuple[Any, float]:
+        """Load entry ``sig``. Returns ``(value, seconds)``.
+
+        ``sharding_for_leaf(i, shape, dtype)`` may return a
+        ``jax.sharding.Sharding`` to place array leaf ``i`` directly onto the
+        current mesh (possibly different from the one it was saved under);
+        ``None`` leaves it as a host numpy array.
+        """
+        t0 = time.perf_counter()
+        d = self._dir(sig)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        with open(os.path.join(d, "treedef.pkl"), "rb") as f:
+            treedef = pickle.load(f)
+        leaves = []
+        for i, ent in enumerate(meta["manifest"]):
+            path = os.path.join(d, ent["file"])
+            if ent["kind"] == "array":
+                shape = tuple(ent["shape"])
+                try:
+                    dtype = np.dtype(ent["dtype"])
+                except TypeError:
+                    import ml_dtypes
+                    dtype = np.dtype(getattr(ml_dtypes, ent["dtype"]))
+                sharding = (sharding_for_leaf(i, shape, dtype)
+                            if sharding_for_leaf else None)
+                if sharding is not None:
+                    mm = np.load(path, mmap_mode="r").view(dtype)
+                    arr = jax.make_array_from_callback(
+                        shape, sharding,
+                        lambda idx, _mm=mm: np.ascontiguousarray(_mm[idx]))
+                    leaves.append(arr)
+                else:
+                    leaves.append(np.load(path).view(dtype))
+            else:
+                with open(path, "rb") as f:
+                    leaves.append(pickle.load(f))
+        value = jax.tree_util.tree_unflatten(treedef, leaves)
+        seconds = time.perf_counter() - t0
+        with self._lock:
+            self._update_bw("_bw_read", meta["nbytes"], seconds)
+        return value, seconds
+
+    # -- metadata / management ---------------------------------------------------
+    def meta(self, sig: str) -> dict:
+        with open(os.path.join(self._dir(sig), "meta.json")) as f:
+            return json.load(f)
+
+    def delete(self, sig: str) -> int:
+        d = self._dir(sig)
+        if not os.path.exists(d):
+            return 0
+        nbytes = self.meta(sig).get("nbytes", 0)
+        shutil.rmtree(d)
+        return nbytes
+
+    def entries(self) -> dict[str, dict]:
+        out = {}
+        if not os.path.exists(self.root):
+            return out
+        for sub in os.listdir(self.root):
+            subdir = os.path.join(self.root, sub)
+            if not os.path.isdir(subdir):
+                continue
+            for sig in os.listdir(subdir):
+                mp = os.path.join(subdir, sig, "meta.json")
+                if os.path.exists(mp):
+                    with open(mp) as f:
+                        out[sig] = json.load(f)
+        return out
+
+    def sigs_by_name(self) -> dict[str, list[str]]:
+        by: dict[str, list[str]] = {}
+        for sig, meta in self.entries().items():
+            by.setdefault(meta["name"], []).append(sig)
+        return by
+
+    def total_bytes(self) -> int:
+        return sum(m.get("nbytes", 0) for m in self.entries().values())
+
+    # -- bandwidth model (feeds l_i estimates) ------------------------------------
+    def _update_bw(self, attr: str, nbytes: int, seconds: float) -> None:
+        if seconds <= 0 or nbytes <= 0:
+            return
+        bw = nbytes / seconds
+        cur = getattr(self, attr)
+        setattr(self, attr, bw if cur is None else 0.7 * cur + 0.3 * bw)
+
+    def est_load_seconds(self, nbytes: float) -> float:
+        bw = self._bw_read or self._bw_write or 500e6  # default 500 MB/s
+        return nbytes / bw + 1e-4

@@ -1,0 +1,3 @@
+from . import pipeline, synth, tabular
+
+__all__ = ["pipeline", "synth", "tabular"]

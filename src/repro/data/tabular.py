@@ -1,0 +1,53 @@
+"""Tabular featurization operators (the census workflow's DPR layer).
+
+These mirror the HML extractors in the paper's Fig. 3: column extractors,
+learned discretization (bucket boundaries from data — a *learned* DPR
+function in the paper's taxonomy), one-hot encoding, interaction features,
+and the example-assembly synthesizer that concatenates feature vectors and
+records per-extractor provenance (used for data-driven pruning §5.4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def column(rows: dict, name: str) -> np.ndarray:
+    return np.asarray(rows[name])
+
+
+def bucketize(values: np.ndarray, n_buckets: int) -> np.ndarray:
+    """Learned discretizer: quantile boundaries estimated from the data."""
+    qs = np.quantile(values, np.linspace(0, 1, n_buckets + 1)[1:-1])
+    return np.digitize(values, qs).astype(np.int32)
+
+
+def one_hot(values: np.ndarray, depth: int) -> np.ndarray:
+    out = np.zeros((len(values), depth), np.float32)
+    out[np.arange(len(values)), np.clip(values, 0, depth - 1)] = 1.0
+    return out
+
+
+def interact(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Interaction feature: outer product of two one-hot blocks."""
+    n = len(a)
+    return (a[:, :, None] * b[:, None, :]).reshape(n, -1)
+
+
+def standardize(values: np.ndarray) -> np.ndarray:
+    v = values.astype(np.float32)
+    return ((v - v.mean()) / (v.std() + 1e-9))[:, None]
+
+
+def assemble(feature_blocks: dict[str, np.ndarray]
+             ) -> tuple[np.ndarray, dict[str, list[int]]]:
+    """Synthesizer: concatenate blocks into FVs + provenance (extractor →
+    feature column indices)."""
+    mats, provenance, start = [], {}, 0
+    for name in sorted(feature_blocks):
+        m = feature_blocks[name]
+        if m.ndim == 1:
+            m = m[:, None]
+        mats.append(m.astype(np.float32))
+        provenance[name] = list(range(start, start + m.shape[1]))
+        start += m.shape[1]
+    return np.concatenate(mats, axis=1), provenance

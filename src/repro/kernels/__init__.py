@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the perf-critical substrate compute (the Helix
+# paper itself has no kernel-level contribution — see DESIGN.md §6).
+# Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with fallback), ref.py (pure-jnp oracle used by allclose tests).

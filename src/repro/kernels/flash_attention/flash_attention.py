@@ -1,0 +1,133 @@
+"""Blockwise online-softmax attention (FlashAttention) for TPU via Pallas.
+
+Tiling: grid = (batch, q_heads, q_blocks, kv_blocks); the kv dimension is
+the innermost, *sequential* grid axis — the fp32 accumulator, running max
+and running sum live in VMEM scratch across kv iterations. Q/K/V blocks are
+(bq × head_dim) / (bk × head_dim) VMEM tiles (128-aligned for the MXU).
+
+Supports: causal masking, sliding windows (per-call static window size),
+GQA (q head h reads kv head h // group), and a traced per-call q position
+offset (prefill continuation) via scalar prefetch.
+
+Masked-out kv blocks are predicated away with ``pl.when`` — for causal
+training that halves the work; for a 1024-window gemma3 layer the cost is
+O(S·window) instead of O(S²).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *,
+            causal: bool, window: int, bq: int, bk: int, nkv: int,
+            scale: float):
+    ikv = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qoff = qoff_ref[0]
+    q_start = qoff + iq * bq
+    k_start = ikv * bk
+    # Block-level predication: skip kv blocks fully outside the mask.
+    need = jnp.bool_(True)
+    if causal:
+        need &= k_start <= q_start + bq - 1
+    if window > 0:
+        need &= k_start + bk - 1 >= q_start - window + 1
+
+    @pl.when(need)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ikv == nkv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           q_offset: jax.Array, *,
+                           causal: bool, window: int,
+                           bq: int, bk: int,
+                           interpret: bool) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D); q_offset: () int32.
+
+    window <= 0 means global. Returns (B, Sq, H, D) in q.dtype.
+    """
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nkv = sq // bq, sk // bk
+    grid = (b, h, nq, nkv)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, bq=bq, bk=bk, nkv=nkv,
+        scale=d ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, 1, d),
+                             lambda bi, hi, qi, ki, qoff: (bi, qi, hi, 0)),
+                pl.BlockSpec((1, bk, 1, d),
+                             lambda bi, hi, qi, ki, qoff: (bi, ki, hi // g, 0)),
+                pl.BlockSpec((1, bk, 1, d),
+                             lambda bi, hi, qi, ki, qoff: (bi, ki, hi // g, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, bq, 1, d), lambda bi, hi, qi, ki, qoff: (bi, qi, hi, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, d), jnp.float32),
+                pltpu.VMEM((bq,), jnp.float32),
+                pltpu.VMEM((bq,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(q_offset, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (no blocking, fp32 softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_offset=0, *, causal: bool = True,
+                  window: int = 0) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D). window <= 0 → global."""
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) * d ** -0.5
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    rel = q_pos - k_pos
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= rel >= 0
+    if window > 0:
+        mask &= rel < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Jit'd RMSNorm wrapper (flattens leading dims; falls back off-tile)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .rmsnorm import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, w, eps: float = 1e-5):
+    shape = x.shape
+    n = 1
+    for s in shape[:-1]:
+        n *= s
+    x2 = x.reshape(n, shape[-1])
+    br = next((b for b in (256, 128, 64, 32, 16, 8, 4, 2, 1) if n % b == 0))
+    if br < 2 and n > 1:
+        return ref.rmsnorm_ref(x, w, eps)
+    interpret = jax.default_backend() != "tpu"
+    out = rmsnorm_pallas(x2, w, eps=eps, block_rows=br, interpret=interpret)
+    return out.reshape(shape)

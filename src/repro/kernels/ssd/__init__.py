@@ -1,0 +1,4 @@
+from . import ops, ref
+from .ssd import ssd_chunk_pallas
+
+__all__ = ["ops", "ref", "ssd_chunk_pallas"]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for SSD: the naive sequential recurrence.
+
+    h_t = h_{t-1} · exp(dt_t·a) + dt_t · (B_t ⊗ x_t)
+    y_t = C_t · h_t
+
+Deliberately independent of the chunked formulation so it validates both the
+Pallas kernel and the XLA chunked reference in models/ssd.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, B, C, h0=None):
+    """x: (b,S,H,P); dt: (b,S,H); a: (H,); B,C: (b,S,N).
+    Returns (y (b,S,H,P) fp32, h_final (b,H,P,N) fp32)."""
+    bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp          # (b,H,P) (b,H) (b,N) (b,N)
+        g = jnp.exp(dt_t * a)              # (b,H)
+        upd = (dt_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]
+        h = h * g[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_final

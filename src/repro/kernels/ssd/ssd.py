@@ -1,0 +1,97 @@
+"""Mamba-2 SSD intra-chunk kernel for TPU via Pallas.
+
+The SSD decomposition (DESIGN.md §6) makes the per-chunk work three
+MXU matmuls; this kernel computes, for one (batch, chunk, head) grid cell
+with VMEM tiles of chunk length L:
+
+    y_intra = ((C Bᵀ) ∘ causal-decay ∘ dt) X              (L×L quadratic part)
+    state   = Bᵀ (X ∘ dt ∘ decay-to-end)                  (chunk boundary state)
+
+The cumulative log-decay ``cs = cumsum(dt·a)`` is precomputed outside (a
+cheap elementwise pass) so the kernel body is pure matmul + exp — Mosaic
+has no cumsum primitive.
+
+The inter-chunk state scan (O(S/L) sequential) and the rank-1 inter-chunk
+output correction stay in XLA (ops.py): they are bandwidth-trivial compared
+to the quadratic part.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, cs_ref, b_ref, c_ref, y_ref, st_ref, *, L: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, :, 0]                             # (L,) f32
+    cs = cs_ref[0, :, 0]                             # (L,) f32 cumulative
+    B = b_ref[0, :, :].astype(jnp.float32)           # (L, N)
+    C = c_ref[0, :, :].astype(jnp.float32)           # (L, N)
+
+    # causal decay matrix: exp(cs_i - cs_j) for i >= j else 0
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    causal = ii >= jj
+    diff = cs[:, None] - cs[None, :]
+    decay = jnp.where(causal, jnp.exp(diff), 0.0)    # (L, L)
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    w = cb * decay * dt[None, :]                     # weight for j→i
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (L, P)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # chunk state: Bᵀ (x ∘ dt ∘ decay-to-end)  → (N, P)
+    seg_end = cs[L - 1]
+    dte = dt * jnp.exp(seg_end - cs)                 # (L,)
+    xd = x * dte[:, None]
+    st = jax.lax.dot_general(B, xd, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    st_ref[0, 0, 0, :, :] = st
+
+
+def ssd_chunk_pallas(x: jax.Array, dt: jax.Array, cs: jax.Array,
+                     B: jax.Array, C: jax.Array, *, chunk: int,
+                     interpret: bool) -> tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD.
+
+    x:  (batch, S, H, P)      dt, cs: (batch, S, H) fp32
+    B, C: (batch, S, N)       S % chunk == 0
+    Returns (y_intra (batch,S,H,P) fp32, states (batch, nc, H, N, P) fp32).
+    """
+    bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    L = chunk
+    assert S % L == 0
+    nc = S // L
+    grid = (bsz, nc, H)
+
+    kernel = functools.partial(_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bi, ci, hi: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, L, 1), lambda bi, ci, hi: (bi, ci, hi)),
+            pl.BlockSpec((1, L, 1), lambda bi, ci, hi: (bi, ci, hi)),
+            pl.BlockSpec((1, L, N), lambda bi, ci, hi: (bi, ci, 0)),
+            pl.BlockSpec((1, L, N), lambda bi, ci, hi: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bi, ci, hi: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, 1, N, P),
+                         lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, H, N, P), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(x, dt, cs, B, C)

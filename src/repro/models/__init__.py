@@ -1,0 +1,9 @@
+from .config import ArchConfig, EncDecCfg, MoECfg, SSMCfg
+from .params import P, init_params, param_specs, shardings_for
+from . import layers, lm, encdec, moe, ssd, registry
+
+__all__ = [
+    "ArchConfig", "EncDecCfg", "MoECfg", "SSMCfg",
+    "P", "init_params", "param_specs", "shardings_for",
+    "layers", "lm", "encdec", "moe", "ssd", "registry",
+]

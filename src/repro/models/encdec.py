@@ -1,0 +1,150 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the audio frontend (mel → conv downsampling) is a STUB:
+``input_specs()`` feeds precomputed frame embeddings (B, S_enc, d_model)
+directly. The transformer backbone is real: bidirectional encoder stack,
+causal decoder stack with self-attention KV cache + cross-attention over the
+encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig
+from .params import P, init_params
+from .lm import _stack, _maybe_remat
+from ..sharding.activation import constrain, batch_axes
+
+
+class EncDecOut(NamedTuple):
+    logits: jax.Array
+    cache: Any
+    aux_loss: jax.Array
+
+
+def _enc_layer_defs(cfg: ArchConfig) -> dict:
+    return {"ln1": layers.rmsnorm_defs(cfg.d_model),
+            "attn": layers.attention_defs(cfg),
+            "ln2": layers.rmsnorm_defs(cfg.d_model),
+            "mlp": layers.mlp_defs(cfg.d_model, cfg.d_ff)}
+
+
+def _dec_layer_defs(cfg: ArchConfig) -> dict:
+    return {"ln1": layers.rmsnorm_defs(cfg.d_model),
+            "attn": layers.attention_defs(cfg),
+            "lnx": layers.rmsnorm_defs(cfg.d_model),
+            "xattn": layers.attention_defs(cfg),
+            "ln2": layers.rmsnorm_defs(cfg.d_model),
+            "mlp": layers.mlp_defs(cfg.d_model, cfg.d_ff)}
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    ed = cfg.encdec
+    return {
+        "frame_proj": P((cfg.d_model, cfg.d_model), ("embed", None)),  # stub frontend adapter
+        "embed": P((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "enc": _stack(_enc_layer_defs(cfg), ed.enc_layers),
+        "dec": _stack(_dec_layer_defs(cfg), ed.dec_layers),
+        "enc_norm": layers.rmsnorm_defs(cfg.d_model),
+        "final_norm": layers.rmsnorm_defs(cfg.d_model),
+        "lm_head": P((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> dict:
+    return init_params(param_defs(cfg), key)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               enc_len: int) -> dict:
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = cfg.encdec.dec_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, kvh, hd), jnp.bfloat16),
+        "v": jnp.zeros((L, batch, max_len, kvh, hd), jnp.bfloat16),
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), jnp.bfloat16),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def encode(cfg: ArchConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d_model) stub embeddings → encoder states."""
+    b, s, _ = frames.shape
+    h = frames.astype(jnp.bfloat16) @ params["frame_proj"]
+    h = constrain(h, batch_axes(), None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, p):
+        h, = carry
+        x = layers.rmsnorm(h, p["ln1"], cfg.norm_eps)
+        out, _ = layers.attn_block(cfg, p["attn"], x, positions,
+                                   window=None, causal=False)
+        h = h + out
+        h = h + layers.mlp_block(
+            p["mlp"], layers.rmsnorm(h, p["ln2"], cfg.norm_eps))
+        h = constrain(h, batch_axes(), None, None)
+        return (h,), None
+
+    body = _maybe_remat(body, cfg)
+    (h,), _ = jax.lax.scan(body, (h,), params["enc"], unroll=cfg.unroll)
+    return layers.rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def decode(cfg: ArchConfig, params: dict, tokens: jax.Array,
+           enc_out: jax.Array, cache: dict | None = None) -> EncDecOut:
+    """Teacher-forced decode (cache=None) or incremental decode (cache)."""
+    from .lm import embed_lookup
+    b, s = tokens.shape
+    h = embed_lookup(cfg, params["embed"], tokens)
+    base = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = base[None, None] + jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = constrain(h, batch_axes(), None, None)
+    has_cache = cache is not None
+
+    def body(carry, xs):
+        h, = carry
+        if has_cache:
+            p, kc, vc = xs
+        else:
+            p, = xs
+            kc = vc = None
+        x = layers.rmsnorm(h, p["ln1"], cfg.norm_eps)
+        out, new_kv = layers.attn_block(
+            cfg, p["attn"], x, positions, window=None,
+            kv_cache=(kc, vc) if has_cache else None,
+            cache_pos=base if has_cache else None)
+        h = h + out
+        x = layers.rmsnorm(h, p["lnx"], cfg.norm_eps)
+        h = h + layers.cross_attn_block(cfg, p["xattn"], x, enc_out)
+        h = h + layers.mlp_block(
+            p["mlp"], layers.rmsnorm(h, p["ln2"], cfg.norm_eps))
+        h = constrain(h, batch_axes(), None, None)
+        ys = (new_kv[0], new_kv[1]) if has_cache else None
+        return (h,), ys
+
+    body = _maybe_remat(body, cfg)
+    if has_cache:
+        xs = (params["dec"], cache["k"], cache["v"])
+        (h,), (ks, vs) = jax.lax.scan(body, (h,), xs, unroll=cfg.unroll)
+        new_cache = {"k": ks, "v": vs, "enc_out": enc_out, "pos": base + s}
+    else:
+        (h,), _ = jax.lax.scan(body, (h,), (params["dec"],), unroll=cfg.unroll)
+        new_cache = None
+    h = layers.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype))
+    logits = constrain(logits, batch_axes(), None,
+                       None if "model" in batch_axes() else "model")
+    return EncDecOut(logits=logits, cache=new_cache,
+                     aux_loss=jnp.zeros((), jnp.float32))
+
+
+def forward(cfg: ArchConfig, params: dict, frames: jax.Array,
+            tokens: jax.Array) -> EncDecOut:
+    """Training forward: encode frames, teacher-force decode tokens."""
+    enc_out = encode(cfg, params, frames)
+    return decode(cfg, params, tokens, enc_out, cache=None)

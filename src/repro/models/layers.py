@@ -1,0 +1,334 @@
+"""Transformer building blocks: RMSNorm, RoPE / M-RoPE, GQA attention with
+sliding windows + KV caches, gated MLP.
+
+All functions are pure; parameters arrive as pytrees built from
+``params.P`` definitions. Attention dispatches to the Pallas flash kernel
+when ``impl == "flash"`` (TPU target; validated in interpret mode), else uses
+the fused-softmax XLA reference (also the dry-run path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import P
+
+# A "very large" window meaning global attention (decode masks use
+# q_pos - k_pos < window; 2^30 exceeds any context we target).
+GLOBAL_WINDOW = 1 << 30
+
+
+# --------------------------------------------------------------------------- norm
+def rmsnorm_defs(d: int) -> P:
+    return P((d,), ("embed",), init="ones", dtype=jnp.float32)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w).astype(dt)
+
+
+# --------------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple | None = None) -> jax.Array:
+    """Rotary embedding.
+
+    x: (B, S, H, D). positions: (B, S) int32, or (3, B, S) for M-RoPE where
+    the three streams are (temporal, height, width) ids and
+    ``mrope_sections`` gives the number of frequency pairs per stream
+    (summing to D//2) — the Qwen2-VL scheme.
+    """
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)  # (d/2,)
+    if mrope_sections is None:
+        pos = positions.astype(jnp.float32)                 # (B, S)
+        ang = pos[..., None] * freqs                        # (B, S, d/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE wants (3, B, S) position ids"
+        sec = mrope_sections
+        assert sum(sec) == d // 2, (sec, d)
+        parts = []
+        start = 0
+        for i, n in enumerate(sec):
+            p = positions[i].astype(jnp.float32)            # (B, S)
+            parts.append(p[..., None] * freqs[start:start + n])
+            start += n
+        ang = jnp.concatenate(parts, axis=-1)               # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- attention
+def attention_defs(cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    defs = {
+        "wq": P((d, h, hd), ("embed", "heads", None)),
+        "wk": P((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": P((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": P((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.use_bias:
+        defs["bq"] = P((h, hd), ("heads", None), init="zeros")
+        defs["bk"] = P((kv, hd), ("kv_heads", None), init="zeros")
+        defs["bv"] = P((kv, hd), ("kv_heads", None), init="zeros")
+    return defs
+
+
+def _sdpa_reference(q, k, v, mask) -> jax.Array:
+    """Grouped-query scaled-dot-product attention, fp32 softmax.
+
+    q: (B, S_q, KV, G, D) — G = q heads per kv head.
+    k, v: (B, S_k, KV, D). mask: broadcastable to (B, KV, G, S_q, S_k).
+    """
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out
+
+
+def _sdpa_chunked(qg, k, v, q_pos, k_pos, *, causal, window, valid_len,
+                  chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention scanned over KV chunks (flash-style, in
+    XLA). Peak memory is O(Sq·chunk) instead of O(Sq·Sk) — the dry-run
+    visible analogue of the Pallas kernel (which owns the real-TPU path).
+
+    qg: (B, Sq, KV, G, D); k/v: (B, Sk, KV, D).
+    """
+    b, sq, kvh, g, d = qg.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-(1 << 30))
+    nc = (sk + pad) // chunk
+    scale = d ** -0.5
+    kc = k.reshape(b, nc, chunk, kvh, d)
+    vc = v.reshape(b, nc, chunk, kvh, d)
+    kpc = k_pos.reshape(b, nc, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, kp_i = xs                       # (b,chunk,kv,d) …
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_i,
+                            preferred_element_type=jnp.float32) * scale
+        rel = q_pos[:, None, None, :, None] - kp_i[:, None, None, None, :]
+        mask = kp_i[:, None, None, None, :] >= 0
+        if causal:
+            mask &= rel >= 0
+        if window is not None:
+            mask &= rel < window
+        if valid_len is not None:
+            mask &= (kp_i[:, None, None, None, :]
+                     < valid_len[:, None, None, None, None])
+        logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.moveaxis(kpc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, -2, 1).reshape(b, sq, kvh, g, d).astype(qg.dtype)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_pos: jax.Array, k_pos: jax.Array,
+                  *, causal: bool, window: int | None,
+                  valid_len: jax.Array | None = None,
+                  impl: str = "reference") -> jax.Array:
+    """GQA attention with positional masking.
+
+    q: (B, S_q, H, D); k/v: (B, S_k, KV, D); q_pos: (B, S_q); k_pos: (B, S_k)
+    valid_len: optional (B,) number of live cache slots (decode).
+    Returns (B, S_q, H, D).
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    rel = q_pos[:, None, None, :, None] - k_pos[:, None, None, None, :]
+    mask = jnp.ones((b, 1, 1, sq, k.shape[1]), bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    if valid_len is not None:
+        mask &= (jnp.arange(k.shape[1])[None, None, None, None, :]
+                 < valid_len[:, None, None, None, None])
+    if impl == "flash" and sq > 1:
+        from ..kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(
+            qg.reshape(b, sq, h, d), k, v,
+            q_offset=q_pos[:, 0], causal=causal,
+            window=window if window is not None else GLOBAL_WINDOW)
+        return out
+    if impl == "chunked" and sq > 1:
+        out = _sdpa_chunked(qg, k, v, q_pos, k_pos, causal=causal,
+                            window=window, valid_len=valid_len)
+        return out.reshape(b, sq, h, d)
+    out = _sdpa_reference(qg, k, v, mask)
+    return out.reshape(b, sq, h, d)
+
+
+def attn_block(cfg, p: dict, x: jax.Array, positions: jax.Array,
+               *, window: int | None, causal: bool = True,
+               kv_cache: tuple | None = None, cache_pos=None,
+               mrope_positions=None) -> tuple[jax.Array, tuple | None]:
+    """Self-attention block (no residual/norm — caller owns those).
+
+    kv_cache: optional (k_cache, v_cache) with shape (B, S_max, KV, D);
+    cache_pos: scalar int32 — write offset (decode step / prefill fill).
+    Returns (out, new_cache).
+    """
+    b, s, d_model = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    rope_pos = mrope_positions if mrope_positions is not None else positions
+    q = apply_rope(q, rope_pos, cfg.rope_theta, cfg.mrope_sections
+                   if mrope_positions is not None else None)
+    k = apply_rope(k, rope_pos, cfg.rope_theta, cfg.mrope_sections
+                   if mrope_positions is not None else None)
+
+    if kv_cache is not None:
+        kc, vc = kv_cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cache_pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cache_pos, axis=1)
+        k_full, v_full = kc, vc
+        k_pos = jnp.broadcast_to(jnp.arange(kc.shape[1], dtype=jnp.int32)[None],
+                                 (b, kc.shape[1]))
+        valid = jnp.broadcast_to(cache_pos + s, (b,))
+        new_cache = (kc, vc)
+    else:
+        k_full, v_full = k, v
+        k_pos = positions if positions.ndim == 2 else positions[0]
+        valid = None
+        new_cache = None
+
+    q_pos = positions if positions.ndim == 2 else positions[0]
+    out = gqa_attention(q, k_full, v_full, q_pos, k_pos,
+                        causal=causal, window=window, valid_len=valid,
+                        impl=cfg.attn_impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def ring_update(kc, vc, kpc, k, v, cache_pos):
+    """Ring-buffer cache write with absolute-position tracking.
+
+    kc/vc: (B, W, KV, hd); kpc: (B, W) int32 absolute positions (−big when
+    empty); k/v: (B, S, KV, hd) new entries for positions
+    [cache_pos, cache_pos+S). Slot = pos % W; for S > W only the last W
+    survive (by construction of the window mask nothing older is needed).
+    """
+    b, w = kpc.shape
+    s = k.shape[1]
+    if s == 1:
+        slot = jax.lax.rem(cache_pos, w)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, slot, 0, 0))
+        kpc = jax.lax.dynamic_update_slice(
+            kpc, jnp.broadcast_to(cache_pos, (b, 1)).astype(jnp.int32),
+            (0, slot))
+        return kc, vc, kpc
+    last = cache_pos + s - 1
+    j = jnp.arange(w, dtype=jnp.int32)
+    p = last - jax.lax.rem(last - j, w)       # newest pos ≤ last in slot j
+    take = p >= cache_pos                     # slot overwritten by this call
+    rel = jnp.clip(p - cache_pos, 0, s - 1)
+    gathered_k = jnp.take(k, rel, axis=1).astype(kc.dtype)
+    gathered_v = jnp.take(v, rel, axis=1).astype(vc.dtype)
+    sel = take[None, :, None, None]
+    kc = jnp.where(sel, gathered_k, kc)
+    vc = jnp.where(sel, gathered_v, vc)
+    kpc = jnp.where(take[None, :], p[None, :], kpc)
+    return kc, vc, kpc
+
+
+def attn_block_ring(cfg, p: dict, x: jax.Array, positions: jax.Array,
+                    ring: tuple, cache_pos, window: int
+                    ) -> tuple[jax.Array, tuple]:
+    """Sliding-window attention against a ring cache (window_cache mode).
+
+    Decode (S==1): write-then-attend over the W ring slots, masking by the
+    *stored absolute positions* (ring order is irrelevant to a position
+    mask). Prefill (S>1, cache_pos==0): attend within the sequence, then
+    ring-write the tail.
+    """
+    b, s, _ = x.shape
+    kc, vc, kpc = ring
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if s == 1:
+        kc, vc, kpc = ring_update(kc, vc, kpc, k, v, cache_pos)
+        out = gqa_attention(q, kc, vc, positions, kpc,
+                            causal=True, window=window,
+                            impl="reference")
+    else:
+        k_pos = positions
+        out = gqa_attention(q, k, v, positions, k_pos,
+                            causal=True, window=window, impl=cfg.attn_impl)
+        kc, vc, kpc = ring_update(kc, vc, kpc, k, v, cache_pos)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (kc, vc, kpc)
+
+
+def cross_attn_block(cfg, p: dict, x: jax.Array, enc: jax.Array) -> jax.Array:
+    """Encoder-decoder cross attention (no cache needed: enc is static)."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    se = enc.shape[1]
+    q_pos = jnp.zeros((b, s), jnp.int32)
+    k_pos = jnp.zeros((b, se), jnp.int32)
+    out = gqa_attention(q, k, v, q_pos, k_pos, causal=False, window=None,
+                        impl="reference")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# --------------------------------------------------------------------------- mlp
+def mlp_defs(d: int, d_ff: int) -> dict:
+    return {
+        "w_gate": P((d, d_ff), ("embed", "mlp")),
+        "w_up": P((d, d_ff), ("embed", "mlp")),
+        "w_down": P((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_block(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,122 @@
+"""Declarative parameter trees with logical sharding axes.
+
+A model is described once as a pytree of :class:`P` leaves (shape + logical
+axis names + init). From that single description we derive:
+
+  * ``init_params``  — materialized arrays (deterministic per-leaf keys),
+  * ``param_specs``  — ``PartitionSpec`` tree for pjit in/out shardings,
+    resolved against a concrete mesh with divisibility fallback (a logical
+    axis only binds a mesh axis when the dim is divisible and the mesh axis
+    is not already used by an earlier dim — this is what auto-selects EP vs
+    expert-TP for MoE weights, and replicates 8-way KV heads on a 16-way
+    model axis instead of failing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: tuple
+    axes: tuple              # logical axis name (or None) per dim
+    init: str = "normal"     # normal | zeros | ones
+    scale: float | None = None   # stddev; default 1/sqrt(fan_in-ish)
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# Logical axis → preferred mesh axes, in priority order.
+DEFAULT_RULES: dict[str, tuple] = {
+    "vocab": ("model",),
+    "embed": ("data",),        # FSDP / ZeRO-3 over the data axis
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),     # EP when divisible…
+    "expert_mlp": ("model",),  # …else expert-TP picks up the axis here
+    "ssm_inner": ("model",),
+    "layers": (),
+    "stage": (),
+}
+
+
+def _leaf_key(root: jax.Array, path) -> jax.Array:
+    k = root
+    for part in path:
+        token = getattr(part, "key", getattr(part, "idx", getattr(part, "name", part)))
+        k = jax.random.fold_in(k, abs(hash(str(token))) % (2**31))
+    return k
+
+
+def init_params(defs: Any, key: jax.Array) -> Any:
+    """Materialize a pytree of P leaves into arrays."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, P))
+    leaves = []
+    for path, p in flat:
+        assert isinstance(p, P), f"non-P leaf at {path}: {p}"
+        k = _leaf_key(key, path)
+        if p.init == "zeros":
+            arr = jnp.zeros(p.shape, p.dtype)
+        elif p.init == "ones":
+            arr = jnp.ones(p.shape, p.dtype)
+        else:
+            # GPT-2-style fixed scale unless overridden; RMSNorm keeps the
+            # network well-conditioned regardless of exact fan-in scaling.
+            scale = p.scale if p.scale is not None else 0.02
+            arr = (jax.random.normal(k, p.shape, jnp.float32) * scale).astype(p.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_specs(defs: Any, mesh, rules: Mapping[str, tuple] | None = None) -> Any:
+    """PartitionSpec tree for a P-tree, resolved against ``mesh``
+    (``jax.sharding.Mesh`` or ``AbstractMesh`` — only axis sizes are used)."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    axis_sizes = dict(mesh.shape)
+
+    def resolve(p: P) -> PartitionSpec:
+        used: set = set()
+        entries = []
+        for dim, logical in zip(p.shape, p.axes):
+            cand = rules.get(logical, ()) if logical else ()
+            picked: tuple = ()
+            # try full tuple first, then singles
+            options = [cand] + [(c,) for c in cand] if len(cand) > 1 else [cand]
+            for opt in options:
+                if not opt:
+                    continue
+                size = int(np.prod([axis_sizes[a] for a in opt]))
+                if all(a not in used and a in axis_sizes for a in opt) \
+                        and dim % size == 0 and size > 1:
+                    picked = tuple(opt)
+                    break
+            used.update(picked)
+            if len(picked) == 0:
+                entries.append(None)
+            elif len(picked) == 1:
+                entries.append(picked[0])
+            else:
+                entries.append(picked)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return PartitionSpec(*entries)
+
+    return jax.tree_util.tree_map(
+        resolve, defs, is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_for(defs: Any, mesh, rules=None) -> Any:
+    specs = param_specs(defs, mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, PartitionSpec))

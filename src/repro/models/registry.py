@@ -1,0 +1,33 @@
+"""Family dispatch: one uniform interface over lm.py / encdec.py.
+
+The step functions (train/prefill/decode) live in ``train/steps.py``; this
+module only centralizes parameter-tree construction so the launcher, the
+checkpointing layer, and the tests agree on structure.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from . import encdec, lm
+from .config import ArchConfig
+
+
+def param_defs(cfg: ArchConfig) -> Any:
+    if cfg.family == "audio":
+        return encdec.param_defs(cfg)
+    return lm.param_defs(cfg)
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Any:
+    if cfg.family == "audio":
+        return encdec.init(cfg, key)
+    return lm.init(cfg, key)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    if cfg.family == "audio":
+        return encdec.init_cache(cfg, batch, max_len,
+                                 enc_len=cfg.encdec.cross_len)
+    return lm.init_cache(cfg, batch, max_len)

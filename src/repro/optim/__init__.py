@@ -1,0 +1,5 @@
+from . import adamw, compress, schedules
+from .adamw import AdamWState, clip_by_global_norm, global_norm
+
+__all__ = ["adamw", "compress", "schedules", "AdamWState",
+           "clip_by_global_norm", "global_norm"]

@@ -1,0 +1,5 @@
+from .steps import TrainState, decode_step, init_train_state, loss_fn, \
+    prefill_step, train_step
+
+__all__ = ["TrainState", "decode_step", "init_train_state", "loss_fn",
+           "prefill_step", "train_step"]

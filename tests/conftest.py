@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see exactly the real local device set (1 CPU) — the 512-device
+# override belongs ONLY to launch/dryrun.py.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks"))

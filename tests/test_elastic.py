@@ -1,0 +1,59 @@
+"""Elastic restart: a value materialized under mesh A restores under mesh B.
+
+Runs in a subprocess with 8 forced host devices (the test suite itself must
+keep seeing 1 device), saving a train-state-like pytree sharded over an
+(8,)-mesh and reloading it onto a (4,2) mesh with different specs.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.store import Store
+
+    store = Store(sys.argv[1])
+    mesh_a = jax.make_mesh((8,), ("data",))
+    value = {
+        "w": jax.device_put(jnp.arange(64 * 16, dtype=jnp.float32
+                                       ).reshape(64, 16),
+                            NamedSharding(mesh_a, P("data", None))),
+        "m": jax.device_put(jnp.ones((32, 8), jnp.bfloat16),
+                            NamedSharding(mesh_a, P("data", None))),
+        "step": 7,
+    }
+    store.save("sig-elastic", "state", value)
+
+    # --- "restart" on a different mesh with different sharding -----------
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
+                           devices=jax.devices()[:8])
+    shard_b = NamedSharding(mesh_b, P("model", "data"))
+    loaded, _ = store.load(
+        "sig-elastic",
+        sharding_for_leaf=lambda i, shape, dt: shard_b
+        if shape == (64, 16) else None)
+    w = loaded["w"]
+    assert isinstance(w, jax.Array) and w.sharding == shard_b, w.sharding
+    np.testing.assert_array_equal(np.asarray(w),
+                                  np.arange(64 * 16).reshape(64, 16))
+    np.testing.assert_array_equal(np.asarray(loaded["m"], np.float32),
+                                  np.ones((32, 8)))
+    assert loaded["step"] == 7
+    print("ELASTIC_OK")
+""")
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT, str(tmp_path / "store")],
+        capture_output=True, text=True, timeout=300,
+        cwd=os.path.join(os.path.dirname(__file__), os.pardir))
+    assert "ELASTIC_OK" in proc.stdout, proc.stdout + proc.stderr

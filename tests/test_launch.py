@@ -1,0 +1,127 @@
+"""Launch-layer units: input_specs coverage, collective parser, local
+lower+compile of each step kind (1-device mesh — the 512-device sweep runs
+via ``python -m repro.launch.dryrun``, not in the test suite)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch import shapes as shapes_lib
+from repro.launch.dryrun import collective_bytes_from_hlo, model_flops
+from repro.launch.mesh import make_local_mesh
+
+
+def test_cells_cover_assignment():
+    total = 0
+    for name in configs.ASSIGNED:
+        cfg = configs.get(name)
+        cs = shapes_lib.cells(cfg)
+        assert "train_4k" in cs and "prefill_32k" in cs and "decode_32k" in cs
+        total += len(cs)
+    # 10 archs × 3 + long_500k for {mamba2, jamba, gemma3}
+    assert total == 33
+
+
+def test_long500k_policy():
+    assert shapes_lib.long_ok(configs.get("mamba2-130m"))
+    assert shapes_lib.long_ok(configs.get("jamba-v0.1-52b"))
+    assert shapes_lib.long_ok(configs.get("gemma3-4b"))
+    assert not shapes_lib.long_ok(configs.get("yi-9b"))
+    assert not shapes_lib.long_ok(configs.get("whisper-medium"))
+
+
+def test_input_specs_shapes():
+    cfg = configs.get("internlm2-1.8b")
+    state, batch = shapes_lib.input_specs(cfg, "train_4k")
+    assert batch["tokens"].shape == (256, 4096)
+    params, tok, cache = shapes_lib.input_specs(cfg, "decode_32k")
+    assert tok.shape == (128, 1)
+    assert cache["k"].shape == (24, 128, 32768, 8, 128)
+    # no real arrays anywhere
+    for leaf in jax.tree_util.tree_leaves(
+            (state, batch, cache),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_vlm_audio_input_specs():
+    vlm = configs.get("qwen2-vl-7b")
+    _, batch = shapes_lib.input_specs(vlm, "train_4k")
+    assert batch["vision_embeds"].shape == (256, 1024, vlm.d_model)
+    assert batch["mrope_positions"].shape == (3, 256, 4096)
+    aud = configs.get("whisper-medium")
+    _, batch = shapes_lib.input_specs(aud, "train_4k")
+    assert batch["frames"].shape == (256, 4096, aud.d_model)
+    assert batch["tokens"].shape == (256, 448)
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[16,4096,1536]{2,1,0} all-gather(%p1), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[8,32]<=[256], to_apply=%sum
+  %rs = f32[64]{0} reduce-scatter(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %dot = f32[32,64]{1,0} dot(%a, %b)
+"""
+    out = collective_bytes_from_hlo(hlo)
+    c = out["counts"]
+    assert c["all-gather"] == 1 and c["all-reduce"] == 1
+    assert c["reduce-scatter"] == 1 and c["collective-permute"] == 1
+    ag = 16 * 4096 * 1536 * 2
+    assert out["operand_bytes"]["all-gather"] == pytest.approx(ag / 16)
+    assert out["operand_bytes"]["all-reduce"] == pytest.approx(1024 * 4)
+    assert out["wire_bytes"]["all-reduce"] == pytest.approx(
+        2 * 1024 * 4 * 31 / 32)
+    assert out["operand_bytes"]["reduce-scatter"] == pytest.approx(64 * 4 * 4)
+    assert out["operand_bytes"]["collective-permute"] == 8 * 128 * 2
+
+
+def test_model_flops_conventions():
+    cfg = configs.get("granite-moe-1b-a400m")
+    train = model_flops(cfg, "train_4k")
+    dec = model_flops(cfg, "decode_32k")
+    assert train == pytest.approx(6 * cfg.active_param_count() * 256 * 4096)
+    assert dec == pytest.approx(2 * cfg.active_param_count() * 128)
+
+
+def test_fsdp_ruleset_build():
+    """train_fsdp spreads the batch over (pod, data, model) and strips TP."""
+    import dataclasses as dc
+    cfg = configs.reduced(configs.get("internlm2-1.8b"))
+    mesh = make_local_mesh()
+    small = dc.replace(shapes_lib.SHAPES["train_4k"], seq=32, batch=4)
+    old = shapes_lib.SHAPES["train_4k"]
+    shapes_lib.SHAPES["train_4k"] = small
+    try:
+        fn, args, in_sh, out_sh, donate = shapes_lib.build_step(
+            cfg, "train_4k", mesh, ruleset_name="train_fsdp")
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                               donate_argnums=donate).lower(*args).compile()
+        assert compiled is not None
+    finally:
+        shapes_lib.SHAPES["train_4k"] = old
+
+
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_build_step_lowers_on_local_mesh(shape):
+    """Lower+compile a REDUCED arch on the 1-device mesh — validates the
+    build_step plumbing (shardings all collapse to replicated)."""
+    cfg = configs.reduced(configs.get("granite-moe-1b-a400m"))
+    # shrink the shape table for the local compile
+    import dataclasses as dc
+    small = dc.replace(shapes_lib.SHAPES[shape], seq=64,
+                       batch=2 if shape != "decode_32k" else 2)
+    mesh = make_local_mesh()
+    old = shapes_lib.SHAPES[shape]
+    shapes_lib.SHAPES[shape] = small
+    try:
+        fn, args, in_sh, out_sh, donate = shapes_lib.build_step(
+            cfg, shape, mesh)
+        with mesh:
+            compiled = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate).lower(*args).compile()
+        assert compiled is not None
+    finally:
+        shapes_lib.SHAPES[shape] = old

@@ -1,0 +1,128 @@
+"""Model-layer properties: RoPE/M-RoPE, windows, MoE dispatch, pruning."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning import zero_weight_extractors
+from repro.models import layers
+from repro.models.config import MoECfg
+from repro.models.moe import moe_block, moe_defs
+from repro.models.params import P, init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(KEY, (2, 8, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+    y = layers.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """q·k after RoPE depends only on relative distance."""
+    d = 64
+    q = jax.random.normal(KEY, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+
+    def dot_at(p1, p2):
+        pos1 = jnp.full((1, 1), p1, jnp.int32)
+        pos2 = jnp.full((1, 1), p2, jnp.int32)
+        qr = layers.apply_rope(q, pos1, 10_000.0)
+        kr = layers.apply_rope(k, pos2, 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+
+def test_mrope_equals_rope_when_positions_tied():
+    """M-RoPE with t=h=w positions must reduce to standard RoPE."""
+    x = jax.random.normal(KEY, (2, 8, 2, 64))
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+    mpos = jnp.broadcast_to(pos, (3, 2, 8))
+    y1 = layers.apply_rope(x, pos, 10_000.0)
+    y2 = layers.apply_rope(x, mpos, 10_000.0, mrope_sections=(8, 12, 12))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_sliding_window_masks_past():
+    """With window w, token i must ignore tokens < i-w+1."""
+    b, s, h, d = 1, 32, 2, 32
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    out_w = layers.gqa_attention(q, k, v, pos, pos, causal=True, window=4)
+    # perturb k/v far outside every window of the last query
+    k2 = k.at[:, :8].add(100.0)
+    v2 = v.at[:, :8].add(100.0)
+    out_w2 = layers.gqa_attention(q, k2, v2, pos, pos, causal=True, window=4)
+    np.testing.assert_allclose(np.asarray(out_w[:, -1]),
+                               np.asarray(out_w2[:, -1]), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 3))
+def test_moe_combine_weights_sum(n_tokens_log, k):
+    """MoE with capacity ≫ tokens must route every token (no drops), and
+    the output must be the gate-weighted sum of expert outputs."""
+    e = 4
+    k = min(k, e)
+    n = 2 ** n_tokens_log
+    mcfg = MoECfg(num_experts=e, top_k=k, expert_d_ff=16,
+                  capacity_factor=float(e))  # huge capacity → no drops
+    defs = moe_defs(8, mcfg)
+    p = init_params(defs, KEY)
+    x = jax.random.normal(KEY, (1, n, 8), jnp.float32)
+    out, aux = moe_block(mcfg, p, x)
+    assert out.shape == (1, n, 8)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """capacity_factor ≪ 1 must drop tokens (outputs become zero-ish)."""
+    e, k = 4, 1
+    mcfg_full = MoECfg(num_experts=e, top_k=k, expert_d_ff=16,
+                       capacity_factor=4.0)
+    mcfg_tiny = MoECfg(num_experts=e, top_k=k, expert_d_ff=16,
+                       capacity_factor=0.05)
+    defs = moe_defs(8, mcfg_full)
+    p = init_params(defs, KEY)
+    x = jax.random.normal(KEY, (1, 64, 8), jnp.float32)
+    out_full, _ = moe_block(mcfg_full, p, x)
+    out_tiny, _ = moe_block(mcfg_tiny, p, x)
+    assert float(jnp.sum(jnp.abs(out_tiny))) < float(jnp.sum(jnp.abs(out_full)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 80), st.integers(8, 130), st.booleans(),
+       st.sampled_from([None, 4, 16]))
+def test_chunked_attention_matches_reference(sq, sk, causal, window):
+    """Property: the flash-style chunked XLA attention (arbitrary Sq/Sk,
+    padding path) must match the dense reference."""
+    b, h, kv, d = 1, 2, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(sq * 131 + sk), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d))
+    k = jax.random.normal(ks[1], (b, sk, kv, d))
+    v = jax.random.normal(ks[2], (b, sk, kv, d))
+    off = max(sk - sq, 0)
+    qp = off + jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq))
+    kp = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32), (b, sk))
+    o1 = layers.gqa_attention(q, k, v, qp, kp, causal=causal, window=window,
+                              impl="reference")
+    o2 = layers.gqa_attention(q, k, v, qp, kp, causal=causal, window=window,
+                              impl="chunked")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_zero_weight_extractor_pruning():
+    w = np.array([0.0, 0.0, 0.5, 1e-12, 2.0])
+    prov = {"dead": [0, 1], "half": [2, 3], "live": [4]}
+    assert zero_weight_extractors(w, prov) == {"dead"}

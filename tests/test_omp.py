@@ -1,0 +1,98 @@
+"""OPT-MAT-PLAN: Algorithm 2 threshold, budget, policies, paper §5.3 notes."""
+import numpy as np
+
+from repro.core.dag import DAG, Node, State
+from repro.core.omp import Materializer, Policy, cumulative_runtime
+
+
+def chain(n):
+    return DAG([Node(f"n{i}", None, (f"n{i-1}",) if i else (),
+                     is_output=(i == n - 1)) for i in range(n)])
+
+
+def test_threshold_rule():
+    dag = chain(3)
+    states = {f"n{i}": State.COMPUTE for i in range(3)}
+    runtime = {"n0": 5.0, "n1": 5.0, "n2": 0.1}
+    m = Materializer(policy=Policy.OPT)
+    # C(n1) = 10; 2·l = 4 < 10 → materialize
+    d = m.decide(dag, "n1", states, runtime, est_load_seconds=2.0,
+                 est_bytes=10)
+    assert d.materialize
+    # 2·l = 12 >= 10 → skip
+    d = m.decide(dag, "n1", states, runtime, est_load_seconds=6.0,
+                 est_bytes=10)
+    assert not d.materialize
+
+
+def test_cumulative_runtime_counts_loaded_and_computed():
+    dag = chain(3)
+    states = {"n0": State.LOAD, "n1": State.COMPUTE, "n2": State.COMPUTE}
+    runtime = {"n0": 1.0, "n1": 2.0, "n2": 4.0}
+    assert cumulative_runtime(dag, "n2", states, runtime) == 7.0
+
+
+def test_storage_budget():
+    dag = chain(2)
+    states = {"n0": State.COMPUTE, "n1": State.COMPUTE}
+    runtime = {"n0": 100.0, "n1": 100.0}
+    m = Materializer(policy=Policy.OPT, storage_budget_bytes=15)
+    assert m.decide(dag, "n0", states, runtime, 0.01, est_bytes=10).materialize
+    # second one exceeds the budget
+    assert not m.decide(dag, "n1", states, runtime, 0.01,
+                        est_bytes=10).materialize
+    m.release(10)
+    assert m.decide(dag, "n1", states, runtime, 0.01, est_bytes=10).materialize
+
+
+def test_policies():
+    dag = chain(2)
+    states = {"n0": State.COMPUTE, "n1": State.COMPUTE}
+    runtime = {"n0": 0.001, "n1": 0.001}
+    am = Materializer(policy=Policy.ALWAYS)
+    nm = Materializer(policy=Policy.NEVER)
+    assert am.decide(dag, "n0", states, runtime, 100.0, 1).materialize
+    assert not nm.decide(dag, "n0", states, runtime, 0.0, 1).materialize
+
+
+def test_nondeterministic_materialization_policy():
+    dag = DAG([Node("nd", None, (), deterministic=False),
+               Node("out", None, ("nd",), is_output=True)])
+    states = {"nd": State.COMPUTE, "out": State.COMPUTE}
+    # OPT never wastes a write on a non-reusable node…
+    m = Materializer(policy=Policy.OPT)
+    assert not m.decide(dag, "nd", states, {"nd": 100.0}, 0.0, 1).materialize
+    # …but the paper's AM (DeepDive-style) does — that waste is the point.
+    am = Materializer(policy=Policy.ALWAYS)
+    assert am.decide(dag, "nd", states, {"nd": 100.0}, 0.0, 1).materialize
+
+
+def test_amortized_horizon_materializes_more():
+    """Beyond-paper: with an expected-reuse horizon > 1 the threshold drops
+    toward l < C (the paper's 2l < C assumes a single future reuse)."""
+    dag = chain(2)
+    states = {"n0": State.COMPUTE, "n1": State.COMPUTE}
+    runtime = {"n0": 10.0, "n1": 0.1}
+    # l = 6: paper rule 2·6 = 12 > C = 10 → skip…
+    m1 = Materializer(policy=Policy.OPT, horizon=1.0)
+    assert not m1.decide(dag, "n0", states, runtime, 6.0, 1).materialize
+    # …but amortized over 5 iterations (1.2·6 = 7.2 < 10) → materialize
+    m5 = Materializer(policy=Policy.OPT, horizon=5.0)
+    assert m5.decide(dag, "n0", states, runtime, 6.0, 1).materialize
+
+
+def test_paper_pathological_chain_documented():
+    """§5.3 'Limitations of Streaming OMP': chain with l_i = i, c_i = 3 —
+    Algorithm 2 materializes every node (storage O(m²)). We reproduce the
+    behavior (it is the paper's documented limitation, not a bug)."""
+    n = 8
+    dag = chain(n)
+    states = {f"n{i}": State.COMPUTE for i in range(n)}
+    runtime = {f"n{i}": 3.0 for i in range(n)}
+    m = Materializer(policy=Policy.OPT)
+    decisions = []
+    for i in range(2, n):       # C(n_i) = 3(i+1); 2·l = 2i < 3i+3 always
+        d = m.decide(dag, f"n{i}", states, runtime,
+                     est_load_seconds=float(i), est_bytes=1)
+        decisions.append(d.materialize)
+    assert all(decisions)

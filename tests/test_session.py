@@ -1,0 +1,115 @@
+"""End-to-end session behavior: Theorem 1 correctness, reuse, purge."""
+import numpy as np
+import pytest
+
+from repro.core import IterativeSession, Policy, Workflow
+from repro.core.dag import State
+
+CALLS = {"parse": 0, "feat": 0, "model": 0}
+
+
+def make_wf(reg=0.1, nfeat=2, bug=False):
+    wf = Workflow("toy")
+    src = wf.source("src", lambda: np.arange(400_000, dtype=np.float64),
+                    config="v1")
+
+    def parse(x):
+        CALLS["parse"] += 1
+        out = x % 9973
+        for _ in range(8):                 # deliberately expensive: loading
+            out = np.sort(out)[::-1].copy()  # beats recomputing (paper §5.1)
+        return np.sort(out)
+
+    def feat(x):
+        CALLS["feat"] += 1
+        return np.stack([x ** i for i in range(1, nfeat + 1)])
+
+    def model(f):
+        CALLS["model"] += 1
+        return f.mean(axis=1) * (reg if not bug else -reg)
+
+    p = wf.scanner("parse", parse, [src], config="v1")
+    f = wf.extractor("feat", feat, [p], config=nfeat)
+    m = wf.learner("model", model, [f], config=reg)
+    e = wf.reducer("eval", lambda mm: float(np.sum(mm)), [m], config="v1")
+    wf.output(e)
+    return wf
+
+
+def fresh_output(**kw):
+    """Ground truth: run the workflow functions directly."""
+    x = np.arange(400_000, dtype=np.float64)
+    x = np.sort(x % 9973)
+    nfeat = kw.get("nfeat", 2)
+    f = np.stack([x ** i for i in range(1, nfeat + 1)])
+    m = f.mean(axis=1) * kw.get("reg", 0.1)
+    return float(np.sum(m))
+
+
+def test_theorem1_correctness_across_changes(tmp_path):
+    sess = IterativeSession(str(tmp_path))
+    r0 = sess.run(make_wf())
+    assert r0.outputs["eval"] == pytest.approx(fresh_output())
+    # PPR-free re-run: pure reuse, same answer
+    r1 = sess.run(make_wf())
+    assert r1.outputs["eval"] == pytest.approx(fresh_output())
+    assert r1.execution.n_computed == 0
+    # L/I change: model+eval recompute; upstream reused/pruned
+    r2 = sess.run(make_wf(reg=0.5))
+    assert r2.outputs["eval"] == pytest.approx(fresh_output(reg=0.5))
+    assert "model" in r2.original and "eval" in r2.original
+    assert "parse" not in r2.original
+    # DPR change: everything below feat recomputes
+    r3 = sess.run(make_wf(nfeat=3))
+    assert r3.outputs["eval"] == pytest.approx(fresh_output(nfeat=3))
+
+
+def test_reuse_avoids_recomputation(tmp_path):
+    CALLS.update(parse=0, feat=0, model=0)
+    sess = IterativeSession(str(tmp_path))
+    sess.run(make_wf())
+    n_parse = CALLS["parse"]
+    sess.run(make_wf(reg=0.9))     # only model/eval changed
+    assert CALLS["parse"] == n_parse, "parse recomputed despite equivalence"
+
+
+def test_restart_resumes_from_store(tmp_path):
+    """A new session (process restart) reuses the previous session's
+    materializations — the checkpoint/restart story."""
+    s1 = IterativeSession(str(tmp_path))
+    s1.run(make_wf())
+    CALLS.update(parse=0, feat=0, model=0)
+    s2 = IterativeSession(str(tmp_path))    # fresh process, same workdir
+    r = s2.run(make_wf())
+    assert CALLS["parse"] == 0 and CALLS["model"] == 0
+    assert r.execution.n_computed == 0
+    assert r.outputs["eval"] == pytest.approx(fresh_output())
+
+
+def test_purge_on_change(tmp_path):
+    sess = IterativeSession(str(tmp_path))
+    sess.run(make_wf(reg=0.1))
+    before = set(sess.store.entries())
+    r = sess.run(make_wf(reg=0.7))
+    # stale 'model'/'eval' materializations purged
+    assert r.purged_bytes > 0
+    names_now = [m["name"] for m in sess.store.entries().values()]
+    assert names_now.count("eval") <= 1
+
+
+def test_unused_nodes_sliced(tmp_path):
+    wf = make_wf()
+    wf.extractor("dangling", lambda x: x + 1, ["parse"], config="v")
+    sess = IterativeSession(str(tmp_path))
+    rep = sess.run(wf)
+    assert "dangling" in rep.sliced_away
+
+
+def test_policies_same_outputs(tmp_path):
+    outs = {}
+    for policy in (Policy.OPT, Policy.ALWAYS, Policy.NEVER):
+        sess = IterativeSession(str(tmp_path / policy.value), policy=policy)
+        sess.run(make_wf())
+        rep = sess.run(make_wf(reg=0.3))
+        outs[policy] = rep.outputs["eval"]
+    assert len(set(round(v, 9) for v in outs.values())) == 1

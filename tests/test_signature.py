@@ -1,0 +1,40 @@
+"""Change tracking (paper §4.2): recursive equivalence via signatures."""
+from repro.core.dag import DAG, Node
+from repro.core.signature import compute_signatures, source_version
+
+
+def lin(n=3, versions=None, det=None):
+    versions = versions or ["v"] * n
+    det = det or [True] * n
+    return DAG([Node(f"n{i}", None, (f"n{i-1}",) if i else (),
+                     version=versions[i], deterministic=det[i])
+                for i in range(n)])
+
+
+def test_identical_dags_equivalent():
+    assert compute_signatures(lin()) == compute_signatures(lin())
+
+
+def test_change_propagates_to_descendants_only():
+    s0 = compute_signatures(lin(versions=["v", "v", "v"]))
+    s1 = compute_signatures(lin(versions=["v", "w", "v"]))
+    assert s0["n0"] == s1["n0"]          # ancestor unaffected
+    assert s0["n1"] != s1["n1"]          # edited node deprecated
+    assert s0["n2"] != s1["n2"]          # descendant deprecated (Def. 2b)
+
+
+def test_nondeterministic_never_equivalent():
+    d = lin(det=[True, False, True])
+    a = compute_signatures(d)
+    b = compute_signatures(d)
+    assert a["n0"] == b["n0"]
+    assert a["n1"] != b["n1"] and a["n2"] != b["n2"]
+    # pinned nonces restore reproducibility (test hook)
+    a = compute_signatures(d, nonces={"n1": "x"})
+    b = compute_signatures(d, nonces={"n1": "x"})
+    assert a == b
+
+
+def test_source_version_hashes_config():
+    assert source_version({"reg": 0.1}) != source_version({"reg": 0.2})
+    assert source_version({"reg": 0.1}) == source_version({"reg": 0.1})

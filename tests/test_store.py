@@ -1,0 +1,65 @@
+"""Materialization store: roundtrips, resharding loads, management."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.store import Store, tree_nbytes
+
+
+def test_roundtrip_pytree(tmp_path):
+    store = Store(str(tmp_path))
+    value = {"a": np.arange(10, dtype=np.float32),
+             "b": [jnp.ones((3, 4), jnp.bfloat16), "hello"],
+             "c": {"n": 42}}
+    info = store.save("s1", "node", value)
+    assert info.nbytes > 0 and store.has("s1")
+    loaded, secs = store.load("s1")
+    assert np.array_equal(loaded["a"], value["a"])
+    assert loaded["b"][1] == "hello" and loaded["c"]["n"] == 42
+    assert np.array_equal(np.asarray(loaded["b"][0]),
+                          np.asarray(value["b"][0]))
+
+
+def test_load_with_sharding(tmp_path):
+    store = Store(str(tmp_path))
+    arr = np.arange(64, dtype=np.float32).reshape(8, 8)
+    store.save("s2", "arr", arr)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = NamedSharding(mesh, PartitionSpec("data"))
+    loaded, _ = store.load("s2", sharding_for_leaf=lambda i, shape, dt: sh)
+    assert isinstance(loaded, jax.Array)
+    assert loaded.sharding == sh
+    assert np.array_equal(np.asarray(loaded), arr)
+
+
+def test_delete_and_entries(tmp_path):
+    store = Store(str(tmp_path))
+    store.save("aa11", "x", np.zeros(4))
+    store.save("bb22", "y", np.zeros(8))
+    assert set(m["name"] for m in store.entries().values()) == {"x", "y"}
+    freed = store.delete("aa11")
+    assert freed > 0 and not store.has("aa11")
+    assert store.total_bytes() == store.meta("bb22")["nbytes"]
+
+
+def test_async_save(tmp_path):
+    store = Store(str(tmp_path))
+    th = store.save_async("cc33", "z", {"v": np.ones(100)})
+    th.join()
+    loaded, _ = store.load("cc33")
+    assert np.array_equal(loaded["v"], np.ones(100))
+
+
+def test_tree_nbytes():
+    assert tree_nbytes({"x": np.zeros((10, 10), np.float32)}) == 400
+
+
+def test_overwrite_same_sig(tmp_path):
+    store = Store(str(tmp_path))
+    store.save("dd44", "w", np.zeros(4))
+    store.save("dd44", "w", np.ones(4))
+    loaded, _ = store.load("dd44")
+    assert np.array_equal(loaded, np.ones(4))
