@@ -11,15 +11,27 @@ Prints ``name,us_per_call,derived`` CSV rows:
       OPT vs AM (OPT should match AM's reuse without AM's storage).
   bench_optimizer_overhead  — OEP max-flow solve time vs DAG size (the
       optimizer must be negligible next to operator runtimes).
+  bench_parallel_speedup    — sequential engine (max_workers=1, the paper's
+      §5.3 discipline) vs the pipelined ready-set engine (worker pool +
+      LOAD prefetch + async writer queue) on workflows with branch
+      parallelism, reported next to the Fig. 5 numbers.
 
-Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list).
+Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list),
+HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import shutil
 import sys
 import time
+
+# Pin BLAS to one thread *before* numpy loads: the speedup benchmark
+# measures engine-level branch parallelism, which double-counts if BLAS
+# also fans out every matmul internally. Applies equally to both engines.
+for _v in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS", "MKL_NUM_THREADS"):
+    os.environ.setdefault(_v, "1")
 
 import numpy as np
 
@@ -135,12 +147,110 @@ def bench_optimizer_overhead() -> None:
         print(f"oep_solver_n{n},{dt * 1e6:.0f},nodes={n}", flush=True)
 
 
+def bench_parallel_speedup() -> None:
+    """Sequential vs pipelined engine, wall clock of execute().
+
+    census exercises the paper's Fig. 3 parallel feature extractors;
+    mnist runs with 12 independent random-FFT towers (KeystoneML-style
+    block featurization + per-tower heads). Each engine runs the same
+    3-iteration schedule (cold start + two edits) on a fresh store.
+    """
+    n_workers = int(os.environ.get("HELIX_BENCH_PAR_WORKERS",
+                                   str(max(2, os.cpu_count() or 2))))
+    n_iters = 3
+    cases = {
+        "census": (W.WORKFLOWS["census"], {}),
+        # Tower ensemble (KeystoneML block solve): 12 independent
+        # fft→head→logits branches. PPR-only edits keep the tower shape
+        # stable across the schedule (towers are nondeterministic, so every
+        # iteration re-runs the full fan-out — the branch-parallel hot
+        # path this benchmark isolates). NOTE: attainable speedup is capped
+        # by the host — on SMT-sibling vCPU pairs, FP-SIMD numpy work
+        # scales at best ~1.4x even fully parallel; on >=4 distinct cores
+        # the tower fan-out exceeds 1.5-2x.
+        "mnist": (W.WORKFLOWS["mnist"],
+                  dict(knobs0=dataclasses.replace(
+                           W.MNISTKnobs(), n_towers=12, n_features=6144,
+                           n_images=8000, epochs=4),
+                       freqs={"PPR": 1.0})),
+    }
+    for name, (wd, overrides) in cases.items():
+        if overrides:
+            wd = dataclasses.replace(wd, **overrides)
+        engine_secs = {}
+        for mode, workers in (("seq", 1), ("par", n_workers)):
+            workdir = os.path.join(ROOT, f"{name}_speedup_{mode}")
+            shutil.rmtree(workdir, ignore_errors=True)
+            sess = IterativeSession(
+                workdir, policy=Policy.OPT, storage_budget_bytes=BUDGET,
+                max_workers=workers, prefetch_depth=8,
+                async_materialization=(workers > 1))
+            secs = 0.0
+            for kn in W.iteration_schedule(wd, n_iters, seed=0):
+                rep = sess.run(wd.build(kn))
+                secs += rep.execution.total_seconds
+            engine_secs[mode] = secs
+        speedup = engine_secs["seq"] / max(engine_secs["par"], 1e-9)
+        print(f"{name}_parallel_speedup,"
+              f"{engine_secs['par'] * 1e6 / n_iters:.0f},"
+              f"seq_s={engine_secs['seq']:.2f};par_s={engine_secs['par']:.2f};"
+              f"workers={n_workers};speedup={speedup:.2f}x", flush=True)
+
+
+def bench_engine_overlap() -> None:
+    """Scheduler-overlap ceiling: a wide diamond of GIL-releasing 150 ms
+    wait stubs (no CPU contention). Near-width× speedup means the ready-set
+    engine adds no serialization beyond the DAG itself — any gap between
+    this and bench_parallel_speedup is hardware contention (shared SMT
+    ports / memory bandwidth), not engine overhead."""
+    import tempfile
+
+    from repro.core.dag import DAG, Node, State
+    from repro.core.executor import execute
+    from repro.core.omp import Materializer
+    from repro.core.store import Store
+
+    width = 8
+    secs = {}
+    for workers in (1, width):
+        nodes = [Node("src", lambda: 0.0)]
+        for i in range(width):
+            nodes.append(Node(f"b{i}", lambda x: (time.sleep(0.15), x)[1],
+                              parents=("src",)))
+        nodes.append(Node("join", lambda *vs: sum(vs),
+                          parents=tuple(f"b{i}" for i in range(width)),
+                          is_output=True))
+        dag = DAG(nodes)
+        states = {n: State.COMPUTE for n in dag.nodes}
+        with tempfile.TemporaryDirectory() as td:
+            t0 = time.perf_counter()
+            execute(dag, {n: f"sig-{n}" for n in dag.nodes}, states,
+                    Store(td), Materializer(policy=Policy.NEVER),
+                    max_workers=workers)
+            secs[workers] = time.perf_counter() - t0
+    print(f"engine_overlap_w{width},{secs[width] * 1e6:.0f},"
+          f"seq_s={secs[1]:.2f};par_s={secs[width]:.2f};"
+          f"speedup={secs[1] / max(secs[width], 1e-9):.2f}x", flush=True)
+
+
 def main() -> None:
     bench_cumulative_runtime()
     bench_storage()
     bench_state_fractions()
     bench_optimizer_overhead()
+    bench_parallel_speedup()
+    bench_engine_overlap()
 
 
 if __name__ == "__main__":
-    main()
+    if len(sys.argv) > 1:     # run the named benches only
+        for bench_name in sys.argv[1:]:
+            fn = globals().get(bench_name)
+            if not (bench_name.startswith("bench_") and callable(fn)):
+                avail = sorted(n for n, v in list(globals().items())
+                               if n.startswith("bench_") and callable(v))
+                sys.exit(f"unknown benchmark {bench_name!r}; available: "
+                         + ", ".join(avail))
+            fn()
+    else:
+        main()

@@ -360,10 +360,33 @@ def mutate_nlp(k: NLPKnobs, kind: str, rng) -> NLPKnobs:
 # ---------------------------------------------------------------------------
 # 4. MNIST (nondeterministic featurization → little reuse)
 # ---------------------------------------------------------------------------
+def train_softmax_np(Z: np.ndarray, y: np.ndarray, reg: float, epochs: int,
+                     lr: float = 0.5) -> np.ndarray:
+    """Softmax regression in plain numpy (BLAS releases the GIL, so tower
+    branches using it parallelize across the pipelined executor's
+    workers — the jitted jax path serializes on XLA's CPU runtime)."""
+    W = np.zeros((Z.shape[1], 10), np.float32)
+    n = len(y)
+    idx = np.arange(n)
+    for _ in range(epochs):
+        logits = Z @ W
+        logits -= logits.max(1, keepdims=True)
+        p = np.exp(logits)
+        p /= p.sum(1, keepdims=True)
+        p[idx, y] -= 1.0
+        W -= lr * (Z.T @ p / n + 2 * reg * W)
+    return W
+
+
 @dataclasses.dataclass(frozen=True)
 class MNISTKnobs:
     n_images: int = 12_000
     n_features: int = 512
+    # >1 splits featurization into independent random-FFT towers of
+    # n_features/n_towers features, each training its own softmax head
+    # (KeystoneML-style block solve, ensembled by logit summation) — the
+    # DAG branch parallelism the pipelined executor exploits.
+    n_towers: int = 1
     reg: float = 1e-3
     epochs: int = 60
     eval_k: int = 1
@@ -374,18 +397,47 @@ def build_mnist(k: MNISTKnobs) -> Workflow:
     imgs = wf.source("mnist", lambda: synth.images(5, k.n_images),
                      config=("imgs", k.n_images))
 
-    def random_fft(data):
-        X, y = data
-        # Nondeterministic (fresh projection every run) — mirrors
-        # KeystoneML's RandomFFT featurization; cannot be reused.
-        rng = np.random.default_rng()
-        W = rng.normal(0, 1.0, (X.shape[1] * X.shape[2], k.n_features))
-        b = rng.uniform(0, 2 * np.pi, k.n_features)
-        Z = np.cos(X.reshape(len(X), -1) @ W + b).astype(np.float32)
-        return Z, y
+    def random_fft_block(n_feat):
+        def block(data):
+            X, y = data
+            # Nondeterministic (fresh projection every run) — mirrors
+            # KeystoneML's RandomFFT featurization; cannot be reused.
+            rng = np.random.default_rng()
+            W = rng.normal(0, 1.0, (X.shape[1] * X.shape[2], n_feat)
+                           ).astype(np.float32)
+            b = rng.uniform(0, 2 * np.pi, n_feat).astype(np.float32)
+            Z = np.cos(X.reshape(len(X), -1).astype(np.float32) @ W + b)
+            return Z, y
+        return block
 
-    feats = wf.extractor("randomFFT", random_fft, [imgs],
-                         config=("fft", k.n_features), deterministic=False)
+    if k.n_towers > 1:
+        per_tower = k.n_features // k.n_towers
+        logit_nodes = []
+        for t in range(k.n_towers):
+            z = wf.extractor(f"fftTower{t}", random_fft_block(per_tower),
+                             [imgs], config=("fft", per_tower, t),
+                             deterministic=False)
+            head = wf.learner(
+                f"towerHead{t}",
+                lambda zy: train_softmax_np(zy[0], zy[1], k.reg, k.epochs),
+                [z], config=("smnp", k.reg, k.epochs, t))
+            logit_nodes.append(wf.learner(
+                f"towerLogits{t}", lambda zy, w: zy[0] @ w,
+                [z, head], config=("logits", t)))
+
+        def ensemble_acc(data, *logit_blocks):
+            _, y = data
+            pred = np.argmax(np.sum(logit_blocks, axis=0), 1)
+            return {"top1": float((pred == y).mean())}
+
+        out = wf.reducer("evalAcc", ensemble_acc, [imgs] + logit_nodes,
+                         config=("acc", k.eval_k, k.n_towers))
+        wf.output(out)
+        return wf
+
+    feats = wf.extractor("randomFFT", random_fft_block(k.n_features),
+                         [imgs], config=("fft", k.n_features),
+                         deterministic=False)
 
     def train_softmax(data):
         Z, y = data

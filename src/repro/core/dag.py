@@ -116,6 +116,56 @@ class DAG:
             raise ValueError("cycle detected in workflow DAG")
         return order
 
+    # -- scheduler support (executor's ready-set engine) -------------------
+    def exec_indegree(self, states: Mapping[str, State]) -> dict[str, int]:
+        """Unfinished-dependency count per runnable node under a plan.
+
+        COMPUTE nodes wait on every non-pruned parent (Constraint 2 says
+        there are no pruned ones; if a broken plan violates that, the node
+        runs anyway and fails with the sequential engine's KeyError instead
+        of deadlocking the pool). LOAD nodes are pure store I/O with no
+        dependencies, so they are ready — and prefetchable — the moment
+        planning finishes. PRUNE nodes never run and are omitted.
+        """
+        indeg: dict[str, int] = {}
+        for name, node in self.nodes.items():
+            s = states[name]
+            if s is State.PRUNE:
+                continue
+            indeg[name] = (sum(1 for p in node.parents
+                               if states[p] is not State.PRUNE)
+                           if s is State.COMPUTE else 0)
+        return indeg
+
+    def oos_order(self, states: Mapping[str, State]) -> list[str]:
+        """The deterministic out-of-scope sequence of the sequential engine.
+
+        Replays the topological sweep symbolically: a node goes out of scope
+        (Def. 5 / Constraint 3) when its last COMPUTE-state child executes,
+        or immediately after its own execution if it has none. The parallel
+        scheduler processes materialization decisions strictly in this order
+        so OMP decisions and budget accounting are identical for any worker
+        count.
+        """
+        remaining = {
+            name: sum(1 for ch in self._children[name]
+                      if states[ch] is State.COMPUTE)
+            for name in self.nodes
+        }
+        order: list[str] = []
+        for name in self._order:
+            s = states[name]
+            if s is State.PRUNE:
+                continue
+            if s is State.COMPUTE:
+                for p in self.nodes[name].parents:
+                    remaining[p] -= 1
+                    if remaining[p] == 0 and states[p] is not State.PRUNE:
+                        order.append(p)
+            if remaining[name] == 0:
+                order.append(name)
+        return order
+
     def __len__(self) -> int:
         return len(self.nodes)
 

@@ -1,23 +1,48 @@
 """Execution engine (paper §2.1 component 3 + §5.3 streaming discipline).
 
-Executes a planned DAG in topological order:
+Executes a planned DAG with a **ready-set scheduler**: a pool of
+``max_workers`` worker threads repeatedly pops the lowest-topological-index
+node whose dependencies are all resolved, so independent branches of the
+sliced DAG run concurrently while the paper's semantics are preserved:
 
-* LOAD nodes read their value from the store (optionally placing array
-  leaves directly onto the current mesh with a caller-supplied sharding —
-  the elastic-restart path).
-* COMPUTE nodes call ``node.fn(*parent_values)``; jax arrays in the result
-  are blocked on so measured runtimes are honest.
-* PRUNE nodes are skipped entirely.
+* LOAD nodes are pure store I/O with no in-DAG dependencies, so they are
+  *prefetched* as soon as execution starts — bounded by ``prefetch_depth``
+  (the maximum number of loaded-but-unconsumed values resident at once, so
+  host memory stays bounded). When the whole pool would otherwise sit idle,
+  the lowest-index gated load is admitted anyway (starvation guard), which
+  makes the scheduler deadlock-free even when a consumer needs more than
+  ``prefetch_depth`` loads resident at once.
+* COMPUTE nodes call ``node.fn(*parent_values)`` once every parent value is
+  in the cache; jax arrays in the result are blocked on *inside the worker
+  measuring that node* so realized per-node runtimes stay honest under
+  concurrency.
+* PRUNE nodes never run.
 
 Out-of-scope detection (Def. 5 / Constraint 3): when the last non-pruned
-child of a node has been produced, the node immediately gets a
-materialization decision from the :class:`Materializer` and is then evicted
-from the in-memory cache (the paper's eager cache pruning, transposed here to
-freeing host/HBM memory). Mandatory outputs are kept and returned.
+child of a node has been produced, the node gets a materialization decision
+from the :class:`Materializer` and is evicted from the in-memory cache (the
+paper's eager cache pruning, transposed to freeing host/HBM memory).
+Mandatory outputs are kept and returned.
+
+**Determinism.** Materialization decisions and storage-budget accounting are
+processed strictly in the out-of-scope order of the *sequential* engine
+(:meth:`DAG.oos_order`), regardless of the order nodes actually finish in.
+With ``max_workers=1`` the scheduler degenerates to exactly the sequential
+topological sweep — same execution order, same decision order, same store
+traffic — so the OEP/OMP invariants and the Theorem-1 correctness argument
+carry over verbatim, and any worker count yields identical outputs and
+decisions on deterministic nodes.
+
+Materialization writes run off the critical path when
+``async_materialization`` is set: values are handed to the store's dedicated
+writer queue (bounded in-flight bytes) and ``mat_seconds`` aggregates the
+writer's measured wall time so overhead accounting is honest in both modes.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import threading
 import time
 from typing import Any, Callable, Mapping
 
@@ -34,9 +59,11 @@ class ExecutionReport:
     runtime: dict[str, float]            # realized per-node seconds (c or l)
     materialized: dict[str, str]         # name -> reason
     skipped_mat: dict[str, str]          # name -> reason
-    mat_seconds: float                   # total time spent writing (sync path)
+    mat_seconds: float                   # total time spent writing (both modes)
     total_seconds: float                 # wall clock of execute()
     outputs: dict[str, Any]
+    max_workers: int = 1                 # worker-pool width used
+    peak_resident_loads: int = 0         # prefetch-gate high-water mark
 
     @property
     def n_computed(self) -> int:
@@ -58,87 +85,267 @@ def _block(value: Any) -> Any:
     return value
 
 
+class _Scheduler:
+    """Shared state of one ``execute()`` call. All mutable fields are
+    guarded by ``self.cv``'s lock; node work (fn calls, store I/O) runs
+    outside it."""
+
+    def __init__(self, dag: DAG, sigs, states, store, materializer,
+                 load_shardings, async_materialization: bool,
+                 max_workers: int, prefetch_depth: int):
+        self.dag = dag
+        self.sigs = sigs
+        self.states = states
+        self.store = store
+        self.materializer = materializer
+        self.load_shardings = load_shardings or {}
+        self.async_mat = async_materialization
+        self.max_workers = max(1, int(max_workers))
+        self.prefetch_depth = max(0, int(prefetch_depth))
+
+        self.cv = threading.Condition()
+        topo = dag.topological()
+        self.idx = {n: i for i, n in enumerate(topo)}
+        self.indeg = dag.exec_indegree(states)
+        self.runnable: list[tuple[int, str]] = [
+            (self.idx[n], n) for n, d in self.indeg.items() if d == 0]
+        heapq.heapify(self.runnable)
+        self.n_total = len(self.indeg)
+        self.n_done = 0
+        self.n_inflight = 0
+
+        # Out-of-scope bookkeeping (sequential-order decision processing).
+        self.remaining = {
+            name: sum(1 for ch in dag.children(name)
+                      if states[ch] is State.COMPUTE)
+            for name in dag.nodes
+        }
+        self.oos_seq = dag.oos_order(states)
+        self.oos_ptr = 0
+        self.oos_ready: set[str] = set()   # COMPUTE-state nodes actually OOS
+        self.oos_done: set[str] = set()    # LOAD-state nodes already handled
+
+        # Prefetch gate: loads in flight or resident-and-unconsumed.
+        self.resident_loads = 0
+        self.peak_resident_loads = 0
+
+        self.cache: dict[str, Any] = {}
+        self.runtime: dict[str, float] = {}
+        self.materialized: dict[str, str] = {}
+        self.skipped: dict[str, str] = {}
+        self.mat_seconds = 0.0
+        self.pending_saves: list[Any] = []
+        self.error: BaseException | None = None
+
+    # -- scheduling --------------------------------------------------------
+    def _pop_runnable_locked(self) -> str | None:
+        """Pop the lowest-topo-index runnable node, honoring the prefetch
+        gate for LOAD nodes. Returns None when nothing can start right now.
+
+        The gate is disabled at ``max_workers=1`` (no overlap to bound, and
+        disabling it keeps the execution order exactly the sequential
+        topological sweep).
+        """
+        gated = (self.max_workers > 1)
+        blocked: list[tuple[int, str]] = []
+        picked: str | None = None
+        while self.runnable:
+            i, name = heapq.heappop(self.runnable)
+            if (gated and self.states[name] is State.LOAD
+                    and self.resident_loads >= self.prefetch_depth):
+                blocked.append((i, name))
+                continue
+            picked = name
+            break
+        if picked is None and blocked and self.n_inflight == 0:
+            # Starvation guard: nothing can run anywhere else, so the plan
+            # genuinely needs more than ``prefetch_depth`` loads resident at
+            # once — admit the lowest-index one to guarantee progress.
+            picked = blocked.pop(0)[1]
+        for item in blocked:
+            heapq.heappush(self.runnable, item)
+        if picked is not None:
+            self.n_inflight += 1
+            if self.states[picked] is State.LOAD:
+                self.resident_loads += 1
+                self.peak_resident_loads = max(self.peak_resident_loads,
+                                               self.resident_loads)
+        return picked
+
+    # -- node execution (outside the lock) ---------------------------------
+    def _run_node(self, name: str) -> tuple[Any, float]:
+        node = self.dag.nodes[name]
+        if self.states[name] is State.LOAD:
+            value, secs = self.store.load(
+                self.sigs[name],
+                sharding_for_leaf=self.load_shardings.get(name))
+            _block(value)
+            return value, secs
+        with self.cv:
+            args = [self.cache[p] for p in node.parents]
+        t0 = time.perf_counter()
+        value = _block(node.fn(*args))
+        return value, time.perf_counter() - t0
+
+    # -- out-of-scope / materialization ------------------------------------
+    def _on_actual_oos(self, name: str) -> None:
+        """Node ``name`` just lost its last live consumer (lock held)."""
+        state = self.states[name]
+        if state is State.PRUNE:
+            return
+        if state is State.LOAD:
+            # Trivial decision — a loaded value is by definition already in
+            # the store. Handle eagerly so the prefetch permit frees at the
+            # true consumption point, not at the decision pointer.
+            self.skipped[name] = "already materialized"
+            if not self.dag.nodes[name].is_output:
+                self.cache.pop(name, None)  # eager eviction (§5.4)
+            self.resident_loads -= 1
+            self.oos_done.add(name)
+        else:
+            self.oos_ready.add(name)
+
+    def _advance_oos_ptr_locked(self, jobs: list[Callable[[], None]]) -> None:
+        """Process materialization decisions strictly in sequential OOS
+        order; slow store writes are deferred into ``jobs`` to run outside
+        the lock."""
+        while self.oos_ptr < len(self.oos_seq):
+            name = self.oos_seq[self.oos_ptr]
+            if self.states[name] is State.LOAD:
+                if name not in self.oos_done:
+                    break
+            elif name in self.oos_ready:
+                self._decide_locked(name, jobs)
+            else:
+                break
+            self.oos_ptr += 1
+
+    def _decide_locked(self, name: str,
+                       jobs: list[Callable[[], None]]) -> None:
+        node = self.dag.nodes[name]
+        value = self.cache.get(name)
+        if self.store.has(self.sigs[name]):
+            self.skipped[name] = "already materialized"
+        else:
+            est_bytes = tree_nbytes(value)
+            est_load = self.store.est_load_seconds(est_bytes)
+            decision = self.materializer.decide(
+                self.dag, name, self.states, self.runtime,
+                est_load, est_bytes)
+            if decision.materialize:
+                self.materialized[name] = decision.reason
+                sig = self.sigs[name]
+                if self.async_mat:
+                    def job(sig=sig, name=name, value=value):
+                        self.pending_saves.append(
+                            self.store.save_enqueue(sig, name, value))
+                else:
+                    def job(sig=sig, name=name, value=value):
+                        info = self.store.save(sig, name, value)
+                        with self.cv:
+                            self.mat_seconds += info.seconds
+                jobs.append(job)
+            else:
+                self.skipped[name] = decision.reason
+        if not node.is_output:
+            self.cache.pop(name, None)  # eager eviction (§5.4 cache pruning)
+
+    # -- worker loop -------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            with self.cv:
+                name = None
+                while self.error is None and self.n_done < self.n_total:
+                    name = self._pop_runnable_locked()
+                    if name is not None:
+                        break
+                    self.cv.wait()
+                if name is None:
+                    return
+            try:
+                value, secs = self._run_node(name)
+            except BaseException as e:  # propagate to execute()
+                with self.cv:
+                    self.n_inflight -= 1
+                    if self.error is None:
+                        self.error = e
+                    self.cv.notify_all()
+                return
+            jobs: list[Callable[[], None]] = []
+            with self.cv:
+                self.cache[name] = value
+                self.runtime[name] = secs
+                self.n_done += 1
+                self.n_inflight -= 1
+                node = self.dag.nodes[name]
+                if self.states[name] is State.COMPUTE:
+                    for p in node.parents:
+                        self.remaining[p] -= 1
+                        if self.remaining[p] == 0:
+                            self._on_actual_oos(p)
+                for ch in self.dag.children(name):
+                    if self.states[ch] is State.COMPUTE:
+                        self.indeg[ch] -= 1
+                        if self.indeg[ch] == 0:
+                            heapq.heappush(self.runnable,
+                                           (self.idx[ch], ch))
+                if self.remaining[name] == 0:
+                    self._on_actual_oos(name)
+                self._advance_oos_ptr_locked(jobs)
+                self.cv.notify_all()
+            for job in jobs:
+                try:
+                    job()
+                except BaseException as e:
+                    with self.cv:
+                        if self.error is None:
+                            self.error = e
+                        self.cv.notify_all()
+                    return
+
+    def run(self) -> None:
+        n_workers = min(self.max_workers, max(self.n_total, 1))
+        if n_workers <= 1:
+            self._worker()
+        else:
+            threads = [threading.Thread(target=self._worker,
+                                        name=f"helix-exec-{i}", daemon=True)
+                       for i in range(n_workers)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        if self.error is not None:
+            raise self.error
+        # Drain the writer queue; its measured write time is this run's
+        # materialization overhead (satellite of §6.6 accounting).
+        for pending in self.pending_saves:
+            info = pending.result()
+            self.mat_seconds += info.seconds
+
+
 def execute(dag: DAG,
             sigs: Mapping[str, str],
             states: Mapping[str, State],
             store: Store,
             materializer: Materializer,
             load_shardings: Mapping[str, Callable] | None = None,
-            async_materialization: bool = False) -> ExecutionReport:
+            async_materialization: bool = False,
+            max_workers: int = 1,
+            prefetch_depth: int = 4) -> ExecutionReport:
+    """Execute a planned DAG. See the module docstring for the scheduler
+    model; ``max_workers=1`` reproduces the sequential paper engine
+    exactly."""
     t_start = time.perf_counter()
-    cache: dict[str, Any] = {}
-    runtime: dict[str, float] = {}
-    materialized: dict[str, str] = {}
-    skipped: dict[str, str] = {}
-    mat_seconds = 0.0
-    pending_threads = []
-    load_shardings = load_shardings or {}
-
-    # Remaining non-pruned consumers per node (for out-of-scope detection).
-    remaining = {
-        name: sum(1 for ch in dag.children(name)
-                  if states[ch] is State.COMPUTE)
-        for name in dag.nodes
-    }
-
-    def handle_out_of_scope(name: str) -> None:
-        nonlocal mat_seconds
-        node = dag.nodes[name]
-        if states[name] is State.PRUNE:
-            return
-        value = cache.get(name)
-        already = store.has(sigs[name])
-        if already:
-            skipped[name] = "already materialized"
-        else:
-            est_bytes = tree_nbytes(value)
-            est_load = store.est_load_seconds(est_bytes)
-            decision = materializer.decide(
-                dag, name, states, runtime, est_load, est_bytes)
-            if decision.materialize:
-                if async_materialization:
-                    pending_threads.append(
-                        store.save_async(sigs[name], name, value))
-                else:
-                    info = store.save(sigs[name], name, value)
-                    mat_seconds += info.seconds
-                materialized[name] = decision.reason
-            else:
-                skipped[name] = decision.reason
-        if not node.is_output:
-            cache.pop(name, None)  # eager eviction (§5.4 cache pruning)
-
-    for name in dag.topological():
-        state = states[name]
-        node = dag.nodes[name]
-        if state is State.PRUNE:
-            continue
-        if state is State.LOAD:
-            value, secs = store.load(sigs[name],
-                                     sharding_for_leaf=load_shardings.get(name))
-            _block(value)
-        else:  # COMPUTE
-            args = [cache[p] for p in node.parents]
-            t0 = time.perf_counter()
-            value = _block(node.fn(*args))
-            secs = time.perf_counter() - t0
-        cache[name] = value
-        runtime[name] = secs
-        # Out-of-scope bookkeeping: this node consumed its parents…
-        if state is State.COMPUTE:
-            for p in node.parents:
-                remaining[p] -= 1
-                if remaining[p] == 0:
-                    handle_out_of_scope(p)
-        # …and may itself already have no live consumers.
-        if remaining[name] == 0:
-            handle_out_of_scope(name)
-
-    for th in pending_threads:
-        th.join()
-
-    outputs = {n: cache[n] for n in dag.outputs() if n in cache}
+    sched = _Scheduler(dag, sigs, states, store, materializer,
+                       load_shardings, async_materialization,
+                       max_workers, prefetch_depth)
+    sched.run()
+    outputs = {n: sched.cache[n] for n in dag.outputs() if n in sched.cache}
     return ExecutionReport(
-        states=dict(states), runtime=runtime, materialized=materialized,
-        skipped_mat=skipped, mat_seconds=mat_seconds,
-        total_seconds=time.perf_counter() - t_start, outputs=outputs)
+        states=dict(states), runtime=sched.runtime,
+        materialized=sched.materialized, skipped_mat=sched.skipped,
+        mat_seconds=sched.mat_seconds,
+        total_seconds=time.perf_counter() - t_start, outputs=outputs,
+        max_workers=sched.max_workers,
+        peak_resident_loads=sched.peak_resident_loads)

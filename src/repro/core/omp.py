@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import threading
 from typing import Mapping
 
 from .dag import DAG, State
@@ -54,12 +55,21 @@ def cumulative_runtime(dag: DAG, name: str,
 
 @dataclasses.dataclass
 class Materializer:
-    """Streaming materialization decisions under a storage budget."""
+    """Streaming materialization decisions under a storage budget.
+
+    Budget accounting is atomic: the pipelined executor may reach decisions
+    from several worker threads (it serializes the *order* of decisions, but
+    concurrent sessions can share one Materializer), so reserve/release on
+    ``used_bytes`` happens under a lock.
+    """
 
     policy: Policy = Policy.OPT
     storage_budget_bytes: float = float("inf")
     used_bytes: float = 0.0
     horizon: float = 1.0  # expected future iterations a node stays reusable
+
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
 
     def decide(self, dag: DAG, name: str,
                states: Mapping[str, State],
@@ -89,11 +99,14 @@ class Materializer:
                            f"2·l={threshold:.3g} >= C={c_cum:.3g}")
 
     def _budgeted(self, est_bytes: float, reason: str) -> MatDecision:
-        if self.used_bytes + est_bytes > self.storage_budget_bytes:
-            return MatDecision(False, f"{reason}; storage budget exhausted")
-        self.used_bytes += est_bytes
+        with self._lock:
+            if self.used_bytes + est_bytes > self.storage_budget_bytes:
+                return MatDecision(False,
+                                   f"{reason}; storage budget exhausted")
+            self.used_bytes += est_bytes
         return MatDecision(True, reason)
 
     def release(self, nbytes: float) -> None:
         """Credit back storage freed by purging stale materializations."""
-        self.used_bytes = max(0.0, self.used_bytes - nbytes)
+        with self._lock:
+            self.used_bytes = max(0.0, self.used_bytes - nbytes)

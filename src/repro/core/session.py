@@ -48,11 +48,33 @@ class IterationReport:
 
 
 class IterativeSession:
+    """Drives iterations of one workflow.
+
+    Execution-engine knobs (see ``executor.py`` for the scheduler model):
+
+    ``max_workers``
+        Width of the executor's worker pool. 1 (default) is the paper's
+        strictly sequential engine; >1 runs independent DAG branches
+        concurrently and overlaps LOAD I/O with compute. Outputs and
+        materialization decisions are identical for any value on
+        deterministic workflows.
+    ``prefetch_depth``
+        Maximum number of LOAD values resident in host memory before a
+        consumer has used them (bounds prefetch memory; ≥1 enables
+        prefetching when ``max_workers > 1``).
+    ``async_materialization``
+        Route materialization writes through the store's dedicated writer
+        queue instead of blocking the executing worker; write wall time is
+        still accounted in ``ExecutionReport.mat_seconds``.
+    """
+
     def __init__(self, workdir: str,
                  policy: Policy = Policy.OPT,
                  storage_budget_bytes: float = float("inf"),
                  async_materialization: bool = False,
-                 horizon: float = 1.0):
+                 horizon: float = 1.0,
+                 max_workers: int = 1,
+                 prefetch_depth: int = 4):
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.store = Store(os.path.join(workdir, "store"))
@@ -62,6 +84,8 @@ class IterativeSession:
             horizon=horizon)
         self.materializer.used_bytes = float(self.store.total_bytes())
         self.async_materialization = async_materialization
+        self.max_workers = max_workers
+        self.prefetch_depth = prefetch_depth
         self.iteration = 0
 
     # ------------------------------------------------------------------------------
@@ -109,7 +133,9 @@ class IterativeSession:
         report = execute(
             sliced, sigs, states, self.store, self.materializer,
             load_shardings=load_shardings,
-            async_materialization=self.async_materialization)
+            async_materialization=self.async_materialization,
+            max_workers=self.max_workers,
+            prefetch_depth=self.prefetch_depth)
 
         # Record statistics for future iterations.
         for n, secs in report.runtime.items():

@@ -11,19 +11,37 @@ the slices each device needs (``np.load(mmap_mode='r')``). That means a value
 materialized under mesh A can be restored under mesh B — the elastic-restart
 path. Non-array leaves are pickled.
 
+The store is safe for concurrent use by the pipelined executor:
+
+* ``save_enqueue`` hands a host snapshot to a dedicated **writer thread**
+  (replacing the old thread-per-save ``save_async``); in-flight bytes are
+  bounded by ``max_inflight_bytes`` so a burst of materializations cannot
+  exhaust host memory. Each :class:`PendingSave` reports the measured write
+  time, which the executor folds into ``mat_seconds``.
+* Multi-leaf values are written/read with **per-leaf parallel .npy I/O**
+  (shared small thread pool) — large pytrees saturate disk bandwidth
+  instead of serializing leaf by leaf.
+* Saves build a uniquely-named temp dir and publish it with an atomic
+  rename under the store lock, so concurrent saves of the same signature
+  are last-writer-wins and readers never observe partial entries; loads
+  retry once if they race an overwrite.
+
 The store records measured save/load wall-times and byte sizes per entry;
 these feed the cost model's ``l_i`` estimates (paper §5.1: l_i =
-bytes / store bandwidth).
+bytes / store bandwidth) via a thread-safe bandwidth EWMA.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 import os
 import pickle
 import shutil
 import threading
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable
 
 import numpy as np
@@ -35,6 +53,37 @@ import jax
 class SaveInfo:
     nbytes: int
     seconds: float
+
+
+class PendingSave:
+    """Handle for a queued write. ``result()`` blocks until the writer has
+    persisted the entry and returns its :class:`SaveInfo`; ``join()`` is
+    kept for drop-in compatibility with the old thread-based API."""
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._info: SaveInfo | None = None
+        self._error: BaseException | None = None
+
+    def _finish(self, info: SaveInfo | None,
+                error: BaseException | None = None) -> None:
+        self._info = info
+        self._error = error
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> SaveInfo:
+        if not self._event.wait(timeout):
+            raise TimeoutError("materialization write still pending")
+        if self._error is not None:
+            raise self._error
+        assert self._info is not None
+        return self._info
+
+    def join(self, timeout: float | None = None) -> None:
+        self._event.wait(timeout)
 
 
 def _leaf_to_host(leaf: Any) -> Any:
@@ -54,14 +103,61 @@ def tree_nbytes(value: Any) -> int:
     return total
 
 
+# Leaves smaller than this are not worth a pool round-trip.
+_PARALLEL_LEAF_MIN_BYTES = 1 << 20
+
+_io_pool: ThreadPoolExecutor | None = None
+_io_pool_lock = threading.Lock()
+
+
+def _leaf_io_pool() -> ThreadPoolExecutor:
+    """Small process-wide pool for per-leaf .npy reads/writes."""
+    global _io_pool
+    with _io_pool_lock:
+        if _io_pool is None:
+            _io_pool = ThreadPoolExecutor(
+                max_workers=4, thread_name_prefix="store-leaf-io")
+        return _io_pool
+
+
+def _npy_storage_view(leaf: np.ndarray) -> np.ndarray:
+    """Reinterpret ml_dtypes leaves (bf16, fp8…) as plain uints for .npy."""
+    if leaf.dtype.kind in "biufc":
+        return leaf
+    return leaf.view({1: np.uint8, 2: np.uint16, 4: np.uint32}
+                     [leaf.dtype.itemsize])
+
+
 class Store:
-    def __init__(self, root: str):
+    _tmp_counter = itertools.count()
+
+    def __init__(self, root: str, max_inflight_bytes: int = 1 << 30):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        self._reap_stale_tmp()
         self._lock = threading.Lock()
         # measured aggregate write bandwidth (bytes/s), EWMA
         self._bw_write: float | None = None
         self._bw_read: float | None = None
+        # dedicated writer queue (overlapped materialization)
+        self.max_inflight_bytes = int(max_inflight_bytes)
+        self._writer_cv = threading.Condition()
+        self._writer_queue: deque = deque()
+        self._writer_thread: threading.Thread | None = None
+        self._inflight_bytes = 0
+
+    def _reap_stale_tmp(self) -> None:
+        """Remove staging dirs orphaned by a crash mid-save. They contain a
+        meta.json, so without this sweep entries()/total_bytes() would count
+        them as phantom entries forever."""
+        for sub in os.listdir(self.root):
+            subdir = os.path.join(self.root, sub)
+            if not os.path.isdir(subdir):
+                continue
+            for name in os.listdir(subdir):
+                if ".tmp-" in name:
+                    shutil.rmtree(os.path.join(subdir, name),
+                                  ignore_errors=True)
 
     # -- paths ---------------------------------------------------------------
     def _dir(self, sig: str) -> str:
@@ -76,62 +172,126 @@ class Store:
         t0 = time.perf_counter()
         host_value = jax.tree_util.tree_map(_leaf_to_host, value)
         d = self._dir(sig)
-        tmp = d + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
+        # Unique temp dir: concurrent saves of one signature must not
+        # clobber each other's staging area (last rename wins below).
+        tmp = (f"{d}.tmp-{os.getpid()}-{threading.get_ident()}"
+               f"-{next(self._tmp_counter)}")
         os.makedirs(tmp, exist_ok=True)
+        try:
+            manifest, nbytes = self._write_leaves(tmp, host_value)
+            seconds = time.perf_counter() - t0
+            meta = {
+                "name": name, "sig": sig, "nbytes": nbytes,
+                "save_seconds": seconds, "created": time.time(),
+                "manifest": manifest,
+            }
+            meta.update(extra_meta or {})
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            with self._lock:
+                if os.path.exists(d):
+                    shutil.rmtree(d)
+                os.rename(tmp, d)
+                self._update_bw("_bw_write", nbytes, seconds)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        return SaveInfo(nbytes=nbytes, seconds=seconds)
+
+    def _write_leaves(self, tmp: str, host_value: Any) -> tuple[list, int]:
         leaves, treedef = jax.tree_util.tree_flatten(host_value)
-        manifest = []
+        manifest: list[dict] = []
         nbytes = 0
+        array_jobs: list[tuple[str, np.ndarray]] = []
         for i, leaf in enumerate(leaves):
             if isinstance(leaf, np.ndarray):
                 fn = f"leaf_{i}.npy"
-                logical = str(leaf.dtype)
-                to_save = leaf
-                if leaf.dtype.kind not in "biufc":  # ml_dtypes (bf16, fp8…)
-                    to_save = leaf.view(
-                        {1: np.uint8, 2: np.uint16, 4: np.uint32}[
-                            leaf.dtype.itemsize])
-                np.save(os.path.join(tmp, fn), to_save, allow_pickle=False)
                 manifest.append({"kind": "array", "file": fn,
                                  "shape": list(leaf.shape),
-                                 "dtype": logical})
+                                 "dtype": str(leaf.dtype)})
                 nbytes += leaf.nbytes
+                array_jobs.append((os.path.join(tmp, fn), leaf))
             else:
                 fn = f"leaf_{i}.pkl"
                 with open(os.path.join(tmp, fn), "wb") as f:
                     pickle.dump(leaf, f)
                 manifest.append({"kind": "pickle", "file": fn})
                 nbytes += os.path.getsize(os.path.join(tmp, fn))
+
+        def write_one(job):
+            path, leaf = job
+            np.save(path, _npy_storage_view(leaf), allow_pickle=False)
+
+        big = [j for j in array_jobs
+               if j[1].nbytes >= _PARALLEL_LEAF_MIN_BYTES]
+        if len(big) >= 2:
+            list(_leaf_io_pool().map(write_one, array_jobs))
+        else:
+            for job in array_jobs:
+                write_one(job)
         with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
             pickle.dump(treedef, f)
-        seconds = time.perf_counter() - t0
-        meta = {
-            "name": name, "sig": sig, "nbytes": nbytes,
-            "save_seconds": seconds, "created": time.time(),
-            "manifest": manifest,
-        }
-        meta.update(extra_meta or {})
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        with self._lock:
-            if os.path.exists(d):
-                shutil.rmtree(d)
-            os.rename(tmp, d)
-            self._update_bw("_bw_write", nbytes, seconds)
-        return SaveInfo(nbytes=nbytes, seconds=seconds)
+        return manifest, nbytes
+
+    # -- writer queue ------------------------------------------------------------
+    def save_enqueue(self, sig: str, name: str, value: Any,
+                     extra_meta: dict | None = None) -> PendingSave:
+        """Queue a write on the store's dedicated writer thread.
+
+        The device→host snapshot happens synchronously (cheap, and it frees
+        the caller to evict the value); the disk write runs off the critical
+        path. Blocks while the writer's in-flight bytes exceed
+        ``max_inflight_bytes`` so queued materializations cannot exhaust
+        host memory.
+        """
+        host_value = jax.tree_util.tree_map(_leaf_to_host, value)
+        est = tree_nbytes(host_value)
+        pending = PendingSave()
+        with self._writer_cv:
+            while (self._inflight_bytes > 0
+                   and self._inflight_bytes + est > self.max_inflight_bytes):
+                self._writer_cv.wait()
+            self._inflight_bytes += est
+            self._writer_queue.append(
+                (sig, name, host_value, extra_meta, est, pending))
+            if self._writer_thread is None or not self._writer_thread.is_alive():
+                self._writer_thread = threading.Thread(
+                    target=self._writer_loop, name="store-writer", daemon=True)
+                self._writer_thread.start()
+            self._writer_cv.notify_all()
+        return pending
+
+    def _writer_loop(self) -> None:
+        while True:
+            with self._writer_cv:
+                if not self._writer_queue:
+                    # Exit when idle; save_enqueue restarts the thread on
+                    # demand, so an idle Store pins no thread for life.
+                    self._writer_thread = None
+                    return
+                sig, name, host_value, extra_meta, est, pending = \
+                    self._writer_queue.popleft()
+            try:
+                info = self.save(sig, name, host_value,
+                                 extra_meta=extra_meta)
+                pending._finish(info)
+            except BaseException as e:
+                pending._finish(None, e)
+            with self._writer_cv:
+                self._inflight_bytes -= est
+                self._writer_cv.notify_all()
 
     def save_async(self, sig: str, name: str, value: Any,
-                   extra_meta: dict | None = None) -> threading.Thread:
-        """Overlapped materialization: snapshot to host synchronously (the
-        cheap part), write to disk on a worker thread. The paper materializes
-        synchronously; this removes the write from the critical path."""
-        host_value = jax.tree_util.tree_map(_leaf_to_host, value)
-        th = threading.Thread(
-            target=self.save, args=(sig, name, host_value),
-            kwargs={"extra_meta": extra_meta}, daemon=True)
-        th.start()
-        return th
+                   extra_meta: dict | None = None) -> PendingSave:
+        """Deprecated alias for :meth:`save_enqueue` (kept for callers that
+        still ``.join()`` the returned handle)."""
+        return self.save_enqueue(sig, name, value, extra_meta=extra_meta)
+
+    def writer_drain(self) -> None:
+        """Block until every queued write has been persisted."""
+        with self._writer_cv:
+            while self._writer_queue or self._inflight_bytes > 0:
+                self._writer_cv.wait()
 
     # -- load ------------------------------------------------------------------
     def load(self, sig: str,
@@ -144,14 +304,27 @@ class Store:
         current mesh (possibly different from the one it was saved under);
         ``None`` leaves it as a host numpy array.
         """
+        for attempt in range(3):
+            try:
+                return self._load_once(sig, sharding_for_leaf)
+            except FileNotFoundError:
+                # Raced an overwrite of the same signature (tmp dir swapped
+                # in under us). If the entry still exists, retry against the
+                # fresh copy; otherwise it is genuinely gone.
+                if attempt == 2 or not self.has(sig):
+                    raise
+        raise AssertionError("unreachable")
+
+    def _load_once(self, sig: str, sharding_for_leaf) -> tuple[Any, float]:
         t0 = time.perf_counter()
         d = self._dir(sig)
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
         with open(os.path.join(d, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
-        leaves = []
-        for i, ent in enumerate(meta["manifest"]):
+
+        def load_leaf(i_ent):
+            i, ent = i_ent
             path = os.path.join(d, ent["file"])
             if ent["kind"] == "array":
                 shape = tuple(ent["shape"])
@@ -164,15 +337,21 @@ class Store:
                             if sharding_for_leaf else None)
                 if sharding is not None:
                     mm = np.load(path, mmap_mode="r").view(dtype)
-                    arr = jax.make_array_from_callback(
+                    return jax.make_array_from_callback(
                         shape, sharding,
                         lambda idx, _mm=mm: np.ascontiguousarray(_mm[idx]))
-                    leaves.append(arr)
-                else:
-                    leaves.append(np.load(path).view(dtype))
-            else:
-                with open(path, "rb") as f:
-                    leaves.append(pickle.load(f))
+                return np.load(path).view(dtype)
+            with open(path, "rb") as f:
+                return pickle.load(f)
+
+        items = list(enumerate(meta["manifest"]))
+        n_big_arrays = sum(
+            1 for _, ent in items if ent["kind"] == "array"
+            and int(np.prod(ent["shape"] or [1])) >= _PARALLEL_LEAF_MIN_BYTES // 8)
+        if sharding_for_leaf is None and n_big_arrays >= 2:
+            leaves = list(_leaf_io_pool().map(load_leaf, items))
+        else:
+            leaves = [load_leaf(it) for it in items]
         value = jax.tree_util.tree_unflatten(treedef, leaves)
         seconds = time.perf_counter() - t0
         with self._lock:
@@ -185,26 +364,35 @@ class Store:
             return json.load(f)
 
     def delete(self, sig: str) -> int:
-        d = self._dir(sig)
-        if not os.path.exists(d):
-            return 0
-        nbytes = self.meta(sig).get("nbytes", 0)
-        shutil.rmtree(d)
-        return nbytes
+        with self._lock:
+            d = self._dir(sig)
+            if not os.path.exists(d):
+                return 0
+            try:
+                with open(os.path.join(d, "meta.json")) as f:
+                    nbytes = json.load(f).get("nbytes", 0)
+            except (FileNotFoundError, json.JSONDecodeError):
+                nbytes = 0
+            shutil.rmtree(d, ignore_errors=True)
+            return nbytes
 
     def entries(self) -> dict[str, dict]:
         out = {}
         if not os.path.exists(self.root):
             return out
-        for sub in os.listdir(self.root):
+        for sub in sorted(os.listdir(self.root)):
             subdir = os.path.join(self.root, sub)
             if not os.path.isdir(subdir):
                 continue
-            for sig in os.listdir(subdir):
+            for sig in sorted(os.listdir(subdir)):
+                if ".tmp-" in sig:
+                    continue  # in-progress staging dir, not an entry
                 mp = os.path.join(subdir, sig, "meta.json")
-                if os.path.exists(mp):
+                try:
                     with open(mp) as f:
                         out[sig] = json.load(f)
+                except (FileNotFoundError, NotADirectoryError):
+                    continue  # raced a concurrent delete / in-progress save
         return out
 
     def sigs_by_name(self) -> dict[str, list[str]]:
@@ -218,6 +406,8 @@ class Store:
 
     # -- bandwidth model (feeds l_i estimates) ------------------------------------
     def _update_bw(self, attr: str, nbytes: int, seconds: float) -> None:
+        # Callers hold self._lock, keeping the EWMA race-free under the
+        # pipelined executor's concurrent saves/loads.
         if seconds <= 0 or nbytes <= 0:
             return
         bw = nbytes / seconds
@@ -225,5 +415,6 @@ class Store:
         setattr(self, attr, bw if cur is None else 0.7 * cur + 0.3 * bw)
 
     def est_load_seconds(self, nbytes: float) -> float:
-        bw = self._bw_read or self._bw_write or 500e6  # default 500 MB/s
+        with self._lock:
+            bw = self._bw_read or self._bw_write or 500e6  # default 500 MB/s
         return nbytes / bw + 1e-4

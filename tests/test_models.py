@@ -1,7 +1,10 @@
 """Model-layer properties: RoPE/M-RoPE, windows, MoE dispatch, pruning."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="dev dependency; see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp

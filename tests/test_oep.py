@@ -2,7 +2,10 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="dev dependency; see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import brute_force_plan, plan, plan_runtime
 from repro.core.dag import DAG, Node, State, validate_states
