@@ -58,8 +58,6 @@ def _memory_model_bytes(rec: dict, cfg, sh) -> float:
     d = cfg.d_model
     L = cfg.num_layers if cfg.encdec is None else (
         cfg.encdec.enc_layers + cfg.encdec.dec_layers)
-    attn_layers = sum(1 for i in range(cfg.num_layers)
-                      if cfg.layer_is_attn(i)) if cfg.encdec is None else L
     heads_dev = max(cfg.num_heads // n_model, 1)
     s = sh.seq if cfg.encdec is None else min(sh.seq, 4096)
 

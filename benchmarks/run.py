@@ -15,9 +15,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
       §5.3 discipline) vs the pipelined ready-set engine (worker pool +
       LOAD prefetch + async writer queue) on workflows with branch
       parallelism, reported next to the Fig. 5 numbers.
+  bench_sweep_reuse         — ISSUE 2: a K-variant hyperparameter sweep
+      sharing one store (concurrent sessions, in-flight dedupe, shared
+      budget ledger) vs. K isolated cold runs, on census and MNIST.
+      Also verifies no shared-prefix signature was computed twice.
 
 Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list),
-HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine).
+HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine),
+HELIX_BENCH_SWEEP_VARIANTS (sweep arms, default 4), HELIX_BENCH_SWEEP_SCALE
+(input-size scale for the sweep bench, default 1 — CI smoke uses ~0.05).
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ import os
 import shutil
 import sys
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 # Pin BLAS to one thread *before* numpy loads: the speedup benchmark
 # measures engine-level branch parallelism, which double-counts if BLAS
@@ -197,6 +204,84 @@ def bench_parallel_speedup() -> None:
               f"workers={n_workers};speedup={speedup:.2f}x", flush=True)
 
 
+def bench_sweep_reuse() -> None:
+    """K-variant sweep, one shared store vs. K isolated cold runs.
+
+    The isolated baseline runs each variant in its own fresh workdir (no
+    cross-variant reuse possible — today's "fleet" of independent Helix
+    users) with the SAME concurrency as the sweep, so the headline
+    speedup isolates reuse rather than thread parallelism (the
+    sequential sum is also reported as iso_seq_s for reference). The
+    sweep runs all K against one store: the max-flow planner + in-flight
+    dedupe turn every shared prefix into one compute and K-1 loads.
+    census shares everything up to example assembly; MNIST shares the
+    random-FFT featurization via the sweep's pinned nonces (one draw for
+    the whole sweep).
+    """
+    from repro.core import IterativeSession, grid, run_sweep
+
+    n_var = int(os.environ.get("HELIX_BENCH_SWEEP_VARIANTS", "4"))
+    sweep_scale = float(os.environ.get("HELIX_BENCH_SWEEP_SCALE", "1"))
+    # Grid axes: a learner knob × a result-analysis (PPR) knob. Variants
+    # then share prefixes *hierarchically* — every arm shares the data
+    # pipeline, arms with equal learner knobs also share the trained model
+    # (the Li et al. 2019 pipeline-aware-tuning structure). The learner
+    # axis gets ⌈K/2⌉ values, the PPR axis 2.
+    regs = [0.03, 0.3, 0.01, 1.0, 0.1, 3.0]
+    n_regs = max(1, (n_var + 1) // 2)
+    cases = {
+        "census": (W.CensusKnobs(n_rows=max(2000,
+                                            int(120_000 * sweep_scale))),
+                   W.build_census,
+                   {"reg": regs[:n_regs], "eval_threshold": [0.5, 0.7]}),
+        "mnist": (W.MNISTKnobs(n_images=max(500,
+                                            int(12_000 * sweep_scale)),
+                               epochs=max(5, int(60 * sweep_scale))),
+                  W.build_mnist,
+                  {"reg": [r * 1e-2 for r in regs[:n_regs]],
+                   "eval_k": [1, 2]}),
+    }
+    for name, (base, build, axes) in cases.items():
+        variants = grid(base, axes, build, name=name)[:n_var]
+        knob_list = [v.knobs for v in variants]
+        n_eff = len(variants)   # the axes can yield fewer arms than asked
+        if n_eff < n_var:
+            print(f"# {name}: {n_var} variants requested, grid yields "
+                  f"{n_eff}", flush=True)
+
+        def run_isolated(i_kn):
+            i, kn = i_kn
+            workdir = os.path.join(ROOT, f"{name}_sweep_iso{i}")
+            shutil.rmtree(workdir, ignore_errors=True)
+            sess = IterativeSession(workdir, storage_budget_bytes=BUDGET)
+            t0 = time.perf_counter()
+            sess.run(build(kn))
+            return time.perf_counter() - t0
+
+        iso_seq = sum(run_isolated(ik) for ik in enumerate(knob_list))
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=n_eff) as pool:
+            list(pool.map(run_isolated, enumerate(knob_list)))
+        iso_par = time.perf_counter() - t0
+
+        workdir = os.path.join(ROOT, f"{name}_sweep_shared")
+        shutil.rmtree(workdir, ignore_errors=True)
+        report = run_sweep(workdir, variants,
+                           storage_budget_bytes=BUDGET)
+        report.raise_errors()
+        # fleet-wide compute-once check on shared signatures
+        shared_recomputed = sum(
+            1 for sig, cnt in report.fleet_computes().items() if cnt > 1)
+        speedup = iso_par / max(report.wall_seconds, 1e-9)
+        print(f"{name}_sweep_reuse,"
+              f"{report.wall_seconds * 1e6 / n_eff:.0f},"
+              f"iso_par_s={iso_par:.2f};iso_seq_s={iso_seq:.2f};"
+              f"sweep_s={report.wall_seconds:.2f};"
+              f"variants={n_eff};speedup={speedup:.2f}x;"
+              f"shared_recomputed={shared_recomputed};"
+              f"store_kb={report.store_bytes / 1024:.0f}", flush=True)
+
+
 def bench_engine_overlap() -> None:
     """Scheduler-overlap ceiling: a wide diamond of GIL-releasing 150 ms
     wait stubs (no CPU contention). Near-width× speedup means the ready-set
@@ -239,6 +324,7 @@ def main() -> None:
     bench_state_fractions()
     bench_optimizer_overhead()
     bench_parallel_speedup()
+    bench_sweep_reuse()
     bench_engine_overlap()
 
 

@@ -22,7 +22,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import Kind, Workflow
+from repro.core import Workflow
 from repro.data import synth, tabular
 
 

@@ -11,7 +11,6 @@ from __future__ import annotations
 import hashlib
 from typing import Any, Callable
 
-import jax
 
 from ..core.store import Store
 

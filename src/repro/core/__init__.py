@@ -6,21 +6,27 @@ from .dag import DAG, Kind, Node, State, validate_states
 from .signature import compute_signatures, source_version
 from .oep import plan, plan_runtime, brute_force_plan
 from .omp import Materializer, Policy, cumulative_runtime
-from .store import Store, tree_nbytes
+from .store import ComputeLease, Store, tree_nbytes
+from .locking import FileLock, SharedEwma, StorageLedger
 from .costs import CostModel
 from .executor import ExecutionReport, execute
 from .workflow import Ref, Workflow
-from .pruning import slice_from_outputs, zero_weight_extractors
 from .session import IterationReport, IterativeSession
+from .pruning import slice_from_outputs, zero_weight_extractors
+from .sweep import (SweepReport, SweepVariant, VariantResult, grid,
+                    random_search, run_sweep)
 
 __all__ = [
     "DAG", "Kind", "Node", "State", "validate_states",
     "compute_signatures", "source_version",
     "plan", "plan_runtime", "brute_force_plan",
     "Materializer", "Policy", "cumulative_runtime",
-    "Store", "tree_nbytes", "CostModel",
+    "ComputeLease", "Store", "tree_nbytes", "CostModel",
+    "FileLock", "SharedEwma", "StorageLedger",
     "ExecutionReport", "execute",
     "Ref", "Workflow",
     "slice_from_outputs", "zero_weight_extractors",
     "IterationReport", "IterativeSession",
+    "SweepReport", "SweepVariant", "VariantResult",
+    "grid", "random_search", "run_sweep",
 ]

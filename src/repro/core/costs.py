@@ -12,44 +12,84 @@ dry-run's roofline terms: max(flops/peak, bytes/bw)) as a prior.
 
 Statistics persist to JSON so sessions survive process restarts — that is
 what turns checkpoint/restart into plain Helix reuse.
+
+Fleet mode: many sessions may share one ``costs.json`` (one workdir, N
+concurrent sweep variants or processes). ``save()`` is therefore a
+*merge-on-flush* transaction — under the file lock it re-reads the on-disk
+blob, EWMA-blends statistics **this session actually measured** into it
+(they are keyed by signature, so both sides measured the same operator;
+blending smooths machine noise), unions the rest, and publishes
+atomically. Values merely read from disk at init are NOT re-merged — that
+would let a stale historical number partially revert a sibling's fresher
+measurement. Sessions refine a shared model instead of clobbering each
+other's flushes.
 """
 from __future__ import annotations
 
-import json
-import os
 import threading
+
+from .locking import read_json, update_json
+
+# Weight of THIS session's fresh measurement when the signature also has
+# an on-disk value: recency dominates (a large gap means the environment
+# changed), the old value just damps noise.
+_MERGE_NEW = 0.7
 
 
 class CostModel:
     def __init__(self, path: str):
         self.path = path
         self._lock = threading.Lock()
-        self.compute_s: dict[str, float] = {}
-        self.nbytes: dict[str, float] = {}
-        self.seen: set[str] = set()
-        if os.path.exists(path):
-            with open(path) as f:
-                blob = json.load(f)
-            self.compute_s = blob.get("compute_s", {})
-            self.nbytes = blob.get("nbytes", {})
-            self.seen = set(blob.get("seen", []))
+        blob = read_json(path, {})
+        self.compute_s: dict[str, float] = blob.get("compute_s", {})
+        self.nbytes: dict[str, float] = blob.get("nbytes", {})
+        self.seen: set[str] = set(blob.get("seen", []))
+        # signatures recorded by THIS session since the last flush — the
+        # only ones whose values save() pushes into the shared file
+        self._dirty: set[str] = set()
+
+    def _merge_stat(self, disk: dict[str, float], mine: dict[str, float]
+                    ) -> dict[str, float]:
+        out = dict(disk)
+        for sig, v in mine.items():
+            if sig in self._dirty:
+                cur = out.get(sig)
+                out[sig] = (v if cur is None
+                            else (1 - _MERGE_NEW) * float(cur)
+                            + _MERGE_NEW * v)
+            elif sig not in out:
+                # not measured here and gone from disk: keep the knowledge
+                out[sig] = v
+        return out
 
     def save(self) -> None:
         with self._lock:
-            tmp = self.path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump({"compute_s": self.compute_s,
-                           "nbytes": self.nbytes,
-                           "seen": sorted(self.seen)}, f)
-            os.replace(tmp, self.path)
+            def txn(blob):
+                return {
+                    "compute_s": self._merge_stat(
+                        blob.get("compute_s", {}), self.compute_s),
+                    "nbytes": self._merge_stat(
+                        blob.get("nbytes", {}), self.nbytes),
+                    "seen": sorted(set(blob.get("seen", [])) | self.seen),
+                }
+
+            merged = update_json(self.path, txn, {})
+            # Adopt the merged view: other sessions' statistics become
+            # available to this session's next planning pass.
+            self.compute_s = dict(merged["compute_s"])
+            self.nbytes = dict(merged["nbytes"])
+            self.seen = set(merged["seen"])
+            self._dirty.clear()
 
     # -- recording -------------------------------------------------------------
     def record(self, sig: str, compute_seconds: float | None = None,
                nbytes: float | None = None) -> None:
         if compute_seconds is not None:
             self.compute_s[sig] = compute_seconds
+            self._dirty.add(sig)
         if nbytes is not None:
             self.nbytes[sig] = nbytes
+            self._dirty.add(sig)
         self.seen.add(sig)
 
     # -- queries ---------------------------------------------------------------

@@ -37,6 +37,24 @@ Materialization writes run off the critical path when
 ``async_materialization`` is set: values are handed to the store's dedicated
 writer queue (bounded in-flight bytes) and ``mat_seconds`` aggregates the
 writer's measured wall time so overhead accounting is honest in both modes.
+
+**In-flight dedupe (fleet mode).** With ``dedupe_inflight`` set, a COMPUTE
+node first takes the store's fleet-wide *compute lease* on its signature:
+
+* lease acquired → compute as usual; if other sessions registered as
+  waiters meanwhile, the value is force-persisted (budget permitting)
+  before the lease is released, so the waiters can load it — each
+  signature is computed at most once fleet-wide;
+* lease held elsewhere → wait for the holder, then load its published
+  result (recorded in ``ExecutionReport.deduped``; the node's realized
+  runtime is the load time). If the entry was not persisted (no budget /
+  holder crashed) the wait loop retries the lease and computes. Waits are
+  bounded by ``dedupe_wait_seconds`` — on timeout the session computes the
+  value itself (duplicate work, never a deadlock).
+
+Dedupe introduces cross-*session* scheduling nondeterminism by design (who
+computes vs. loads depends on arrival order); within a single session the
+determinism guarantees above are unchanged, and the mode is off by default.
 """
 from __future__ import annotations
 
@@ -64,6 +82,9 @@ class ExecutionReport:
     outputs: dict[str, Any]
     max_workers: int = 1                 # worker-pool width used
     peak_resident_loads: int = 0         # prefetch-gate high-water mark
+    # COMPUTE-planned nodes whose value was in fact loaded because another
+    # session computed the same signature first (in-flight dedupe).
+    deduped: dict[str, str] = dataclasses.field(default_factory=dict)
 
     @property
     def n_computed(self) -> int:
@@ -92,7 +113,11 @@ class _Scheduler:
 
     def __init__(self, dag: DAG, sigs, states, store, materializer,
                  load_shardings, async_materialization: bool,
-                 max_workers: int, prefetch_depth: int):
+                 max_workers: int, prefetch_depth: int,
+                 dedupe_inflight: bool = False,
+                 dedupe_wait_seconds: float = 120.0,
+                 share_sigs: frozenset | set | None = None,
+                 dedupe_skip: frozenset | set | None = None):
         self.dag = dag
         self.sigs = sigs
         self.states = states
@@ -102,6 +127,17 @@ class _Scheduler:
         self.async_mat = async_materialization
         self.max_workers = max(1, int(max_workers))
         self.prefetch_depth = max(0, int(prefetch_depth))
+        self.dedupe = bool(dedupe_inflight)
+        self.dedupe_wait_seconds = float(dedupe_wait_seconds)
+        # Signatures known (by the sweep driver) to be wanted by sibling
+        # sessions: always persisted on lease-compute, so each is computed
+        # exactly once fleet-wide even when siblings race the waiter
+        # registration or arrive later.
+        self.share_sigs = frozenset(share_sigs or ())
+        # Nodes the planner chose to COMPUTE *despite* a loadable entry
+        # (load costlier than recompute): the dedupe shortcut must not
+        # override that judgment by loading anyway.
+        self.dedupe_skip = frozenset(dedupe_skip or ())
 
         self.cv = threading.Condition()
         topo = dag.topological()
@@ -133,6 +169,7 @@ class _Scheduler:
         self.runtime: dict[str, float] = {}
         self.materialized: dict[str, str] = {}
         self.skipped: dict[str, str] = {}
+        self.deduped: dict[str, str] = {}
         self.mat_seconds = 0.0
         self.pending_saves: list[Any] = []
         self.error: BaseException | None = None
@@ -181,11 +218,98 @@ class _Scheduler:
                 sharding_for_leaf=self.load_shardings.get(name))
             _block(value)
             return value, secs
+        if self.dedupe and name not in self.dedupe_skip:
+            return self._run_compute_deduped(name, node)
+        return self._run_compute(name, node)
+
+    def _run_compute(self, name: str, node) -> tuple[Any, float]:
         with self.cv:
             args = [self.cache[p] for p in node.parents]
         t0 = time.perf_counter()
         value = _block(node.fn(*args))
         return value, time.perf_counter() - t0
+
+    def _run_compute_deduped(self, name: str, node) -> tuple[Any, float]:
+        """Fleet-wide compute-once: lease → compute (+ force-persist when
+        waiters exist) | lease busy → wait, then load the holder's result."""
+        sig = self.sigs[name]
+        lease = None
+        deadline = time.monotonic() + self.dedupe_wait_seconds
+        while True:
+            if self.store.has(sig):
+                try:
+                    value, secs = self.store.load(
+                        sig, sharding_for_leaf=self.load_shardings.get(name))
+                except FileNotFoundError:
+                    continue  # raced an eviction — retry
+                _block(value)
+                with self.cv:
+                    self.deduped[name] = "computed by another session"
+                return value, secs
+            lease = self.store.acquire_compute(sig)
+            if lease is not None:
+                break
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break  # bounded wait: duplicate-compute beats deadlock
+            if not self.store.wait_compute(sig, timeout=remaining):
+                break
+            # The lease lock came free (or is only held by shared read
+            # pins, which coexist with our shared wait) yet the entry is
+            # still absent and exclusive acquisition failed. Back off
+            # briefly so this retry loop can never busy-spin; the
+            # deadline above bounds it overall.
+            time.sleep(0.005)
+        try:
+            value, secs = self._run_compute(name, node)
+            if lease is not None:
+                self._share_inflight(name, sig, lease, value, secs)
+            return value, secs
+        finally:
+            if lease is not None:
+                lease.release()
+
+    def _share_inflight(self, name: str, sig: str, lease,
+                        value: Any, compute_seconds: float) -> None:
+        """Persist a just-computed value for the fleet, *before* the lease
+        is released (so waiters find it on wake-up). Persists when the
+        signature is known-shared across sibling variants, when someone is
+        registered as waiting, or when reloading is cheaper than the
+        measured compute (a sibling that races the waiter registration —
+        or plans later — then LOADs instead of recomputing). This bypasses
+        Algorithm 2 — cross-session reuse makes the payoff certain — but
+        still reserves against the (possibly fleet-shared) budget."""
+        if self.store.has(sig):
+            return
+        n_waiting = lease.waiters()
+        est_bytes = tree_nbytes(value)
+        if (sig not in self.share_sigs and n_waiting == 0
+                and self.store.est_load_seconds(est_bytes)
+                >= compute_seconds):
+            return  # nobody wants it and recompute is cheaper than load
+        if not self.materializer.try_reserve(est_bytes):
+            return  # no budget: waiters recompute after the timeout/retry
+        info = self._budgeted_save(sig, name, value, est_bytes)
+        with self.cv:
+            self.mat_seconds += info.seconds
+            self.materialized[name] = (
+                f"in-flight dedupe: {n_waiting} waiting session(s)"
+                if n_waiting else "in-flight dedupe: shared signature")
+
+    def _budgeted_save(self, sig: str, name: str, value: Any,
+                       est_bytes: float) -> Any:
+        """Persist a value whose budget was already reserved, keeping the
+        (possibly fleet-shared) ledger honest: the reservation is credited
+        back if the write fails, or if it turns out to have overwritten an
+        entry a concurrent session already paid for."""
+        try:
+            info = self.store.save(sig, name, value)
+        except BaseException:
+            self.materializer.release(est_bytes)
+            raise
+        if info.replaced:
+            self.materializer.release(est_bytes)
+        return info
 
     # -- out-of-scope / materialization ------------------------------------
     def _on_actual_oos(self, name: str) -> None:
@@ -224,7 +348,9 @@ class _Scheduler:
                        jobs: list[Callable[[], None]]) -> None:
         node = self.dag.nodes[name]
         value = self.cache.get(name)
-        if self.store.has(self.sigs[name]):
+        if name in self.materialized:
+            pass  # force-persisted by the in-flight dedupe path
+        elif self.store.has(self.sigs[name]):
             self.skipped[name] = "already materialized"
         else:
             est_bytes = tree_nbytes(value)
@@ -236,12 +362,15 @@ class _Scheduler:
                 self.materialized[name] = decision.reason
                 sig = self.sigs[name]
                 if self.async_mat:
-                    def job(sig=sig, name=name, value=value):
+                    def job(sig=sig, name=name, value=value,
+                            est=est_bytes):
                         self.pending_saves.append(
-                            self.store.save_enqueue(sig, name, value))
+                            (est, self.store.save_enqueue(sig, name,
+                                                          value)))
                 else:
-                    def job(sig=sig, name=name, value=value):
-                        info = self.store.save(sig, name, value)
+                    def job(sig=sig, name=name, value=value,
+                            est=est_bytes):
+                        info = self._budgeted_save(sig, name, value, est)
                         with self.cv:
                             self.mat_seconds += info.seconds
                 jobs.append(job)
@@ -318,9 +447,16 @@ class _Scheduler:
         if self.error is not None:
             raise self.error
         # Drain the writer queue; its measured write time is this run's
-        # materialization overhead (satellite of §6.6 accounting).
-        for pending in self.pending_saves:
-            info = pending.result()
+        # materialization overhead (satellite of §6.6 accounting). Failed
+        # or overwriting writes credit their budget reservation back.
+        for est, pending in self.pending_saves:
+            try:
+                info = pending.result()
+            except BaseException:
+                self.materializer.release(est)
+                raise
+            if info.replaced:
+                self.materializer.release(est)
             self.mat_seconds += info.seconds
 
 
@@ -332,14 +468,25 @@ def execute(dag: DAG,
             load_shardings: Mapping[str, Callable] | None = None,
             async_materialization: bool = False,
             max_workers: int = 1,
-            prefetch_depth: int = 4) -> ExecutionReport:
+            prefetch_depth: int = 4,
+            dedupe_inflight: bool = False,
+            dedupe_wait_seconds: float = 120.0,
+            share_sigs: frozenset | set | None = None,
+            dedupe_skip: frozenset | set | None = None) -> ExecutionReport:
     """Execute a planned DAG. See the module docstring for the scheduler
     model; ``max_workers=1`` reproduces the sequential paper engine
-    exactly."""
+    exactly. ``dedupe_inflight`` enables the fleet-wide compute-once
+    protocol for COMPUTE nodes (shared-store concurrent sessions);
+    ``share_sigs`` marks signatures known to recur across sibling
+    sessions (always persisted on lease-compute)."""
     t_start = time.perf_counter()
     sched = _Scheduler(dag, sigs, states, store, materializer,
                        load_shardings, async_materialization,
-                       max_workers, prefetch_depth)
+                       max_workers, prefetch_depth,
+                       dedupe_inflight=dedupe_inflight,
+                       dedupe_wait_seconds=dedupe_wait_seconds,
+                       share_sigs=share_sigs,
+                       dedupe_skip=dedupe_skip)
     sched.run()
     outputs = {n: sched.cache[n] for n in dag.outputs() if n in sched.cache}
     return ExecutionReport(
@@ -348,4 +495,5 @@ def execute(dag: DAG,
         mat_seconds=sched.mat_seconds,
         total_seconds=time.perf_counter() - t_start, outputs=outputs,
         max_workers=sched.max_workers,
-        peak_resident_loads=sched.peak_resident_loads)
+        peak_resident_loads=sched.peak_resident_loads,
+        deduped=sched.deduped)

@@ -28,6 +28,7 @@ import threading
 from typing import Mapping
 
 from .dag import DAG, State
+from .locking import StorageLedger
 
 
 class Policy(enum.Enum):
@@ -61,12 +62,23 @@ class Materializer:
     from several worker threads (it serializes the *order* of decisions, but
     concurrent sessions can share one Materializer), so reserve/release on
     ``used_bytes`` happens under a lock.
+
+    Fleet mode: pass a :class:`StorageLedger` and the budget is enforced
+    against the *shared on-disk* used-bytes counter instead of this
+    instance's private tally — N concurrent sessions then split one
+    storage budget S rather than each assuming it owns all of S.
+    ``used_bytes`` remains a local mirror of what this instance reserved.
     """
 
     policy: Policy = Policy.OPT
     storage_budget_bytes: float = float("inf")
     used_bytes: float = 0.0
     horizon: float = 1.0  # expected future iterations a node stays reusable
+    ledger: StorageLedger | None = None
+    # Sweeps with pinned signature nonces make nondeterministic operators
+    # equivalent across sibling variants — then they *are* reusable and
+    # Algorithm 2's nondeterminism veto must be lifted.
+    nondet_reusable: bool = False
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
@@ -87,7 +99,7 @@ class Materializer:
             # never-reusable nondeterministic outputs (§6.6 — the wasted
             # writes are exactly why AM loses on MNIST/NLP).
             return self._budgeted(est_bytes, "policy AM")
-        if not node.deterministic:
+        if not node.deterministic and not self.nondet_reusable:
             return MatDecision(False, "nondeterministic: never reusable")
         # Algorithm 2 with amortization horizon (horizon=1 == paper).
         c_cum = cumulative_runtime(dag, name, states, runtime)
@@ -99,14 +111,30 @@ class Materializer:
                            f"2·l={threshold:.3g} >= C={c_cum:.3g}")
 
     def _budgeted(self, est_bytes: float, reason: str) -> MatDecision:
+        if self.try_reserve(est_bytes):
+            return MatDecision(True, reason)
+        return MatDecision(False, f"{reason}; storage budget exhausted")
+
+    def try_reserve(self, est_bytes: float) -> bool:
+        """Reserve budget for a write; also used directly by the executor's
+        in-flight dedupe when it force-persists a value other sessions are
+        waiting on (that save bypasses Algorithm 2 but not the budget)."""
+        if self.ledger is not None:
+            if not self.ledger.try_reserve(est_bytes,
+                                           self.storage_budget_bytes):
+                return False
+            with self._lock:
+                self.used_bytes += est_bytes
+            return True
         with self._lock:
             if self.used_bytes + est_bytes > self.storage_budget_bytes:
-                return MatDecision(False,
-                                   f"{reason}; storage budget exhausted")
+                return False
             self.used_bytes += est_bytes
-        return MatDecision(True, reason)
+        return True
 
     def release(self, nbytes: float) -> None:
         """Credit back storage freed by purging stale materializations."""
+        if self.ledger is not None:
+            self.ledger.release(nbytes)
         with self._lock:
             self.used_bytes = max(0.0, self.used_bytes - nbytes)

@@ -19,8 +19,9 @@ import os
 from typing import Any, Callable, Mapping
 
 from .costs import CostModel
-from .dag import DAG, Kind, State
+from .dag import State
 from .executor import ExecutionReport, execute
+from .locking import StorageLedger
 from .omp import Materializer, Policy
 from .oep import plan
 from .pruning import slice_from_outputs
@@ -46,6 +47,10 @@ class IterationReport:
     def total_seconds(self) -> float:
         return self.execution.total_seconds
 
+    @property
+    def deduped(self) -> dict[str, str]:
+        return self.execution.deduped
+
 
 class IterativeSession:
     """Drives iterations of one workflow.
@@ -66,6 +71,27 @@ class IterativeSession:
         Route materialization writes through the store's dedicated writer
         queue instead of blocking the executing worker; write wall time is
         still accounted in ``ExecutionReport.mat_seconds``.
+
+    Fleet knobs (many sessions, one workdir — see sweep.py):
+
+    ``dedupe_inflight``
+        Compute-once protocol: COMPUTE nodes take the store's fleet-wide
+        per-signature lease; sessions needing a signature someone else is
+        computing wait and load the published result instead.
+    ``dedupe_wait_seconds``
+        Upper bound on waiting for another session's lease before
+        falling back to computing locally (the deadlock escape hatch).
+        Must exceed the longest shared node's compute time or waiters
+        duplicate it; sweeps default this to an hour.
+    ``shared_budget``
+        Enforce ``storage_budget_bytes`` against the store's shared
+        on-disk ledger, so N concurrent sessions split one budget.
+    ``purge_stale``
+        The paper's §6.6 purge of prior materializations of *original*
+        operators. Must be disabled for concurrent sweeps: sibling
+        variants legitimately hold same-name/different-signature entries
+        that are not stale. (Deletes always respect other sessions' live
+        leases regardless.)
     """
 
     def __init__(self, workdir: str,
@@ -74,26 +100,47 @@ class IterativeSession:
                  async_materialization: bool = False,
                  horizon: float = 1.0,
                  max_workers: int = 1,
-                 prefetch_depth: int = 4):
+                 prefetch_depth: int = 4,
+                 dedupe_inflight: bool = False,
+                 dedupe_wait_seconds: float = 600.0,
+                 shared_budget: bool = False,
+                 purge_stale: bool = True,
+                 nondet_reusable: bool = False):
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.store = Store(os.path.join(workdir, "store"))
         self.cost_model = CostModel(os.path.join(workdir, "costs.json"))
+        ledger = None
+        if shared_budget:
+            ledger = StorageLedger(self.store.ledger_path)
+            ledger.ensure(float(self.store.total_bytes()))
         self.materializer = Materializer(
             policy=policy, storage_budget_bytes=storage_budget_bytes,
-            horizon=horizon)
-        self.materializer.used_bytes = float(self.store.total_bytes())
+            horizon=horizon, ledger=ledger,
+            nondet_reusable=nondet_reusable)
+        if ledger is None:
+            self.materializer.used_bytes = float(self.store.total_bytes())
         self.async_materialization = async_materialization
         self.max_workers = max_workers
         self.prefetch_depth = prefetch_depth
+        self.dedupe_inflight = dedupe_inflight
+        self.dedupe_wait_seconds = dedupe_wait_seconds
+        self.purge_stale = purge_stale
         self.iteration = 0
 
     # ------------------------------------------------------------------------------
     def run(self, workflow: Workflow,
-            load_shardings: Mapping[str, Callable] | None = None
-            ) -> IterationReport:
+            load_shardings: Mapping[str, Callable] | None = None,
+            nonces: Mapping[str, str] | None = None,
+            share_sigs: frozenset | set | None = None) -> IterationReport:
+        """Run one iteration. ``nonces`` optionally pins the signature
+        nonces of nondeterministic nodes — the sweep driver passes one
+        shared nonce map so identical unseeded operators across concurrent
+        variants become equivalent (computed once, loaded by the rest).
+        ``share_sigs`` marks signatures sibling sessions also need (the
+        executor force-persists those on lease-compute)."""
         dag = workflow.build()
-        sigs = compute_signatures(dag)
+        sigs = compute_signatures(dag, nonces=nonces)
 
         # §5.4 program slicing.
         keep = slice_from_outputs(dag)
@@ -116,30 +163,62 @@ class IterativeSession:
             else:
                 load_cost[n] = None
 
-        # §5.2 OEP via max-flow.
-        states = plan(sliced, compute_cost, load_cost, original)
+        # §5.2 OEP via max-flow. Planned LOADs are pinned with read
+        # leases so a concurrent session's eviction cannot yank them
+        # during execution; an entry that vanished in the plan→pin window
+        # (another session's purge won that race) forces a replan with
+        # its load marked unavailable — the executor's LOAD path has no
+        # compute fallback, so it must never start with a dead plan.
+        for _ in range(len(sliced) + 1):
+            states = plan(sliced, compute_cost, load_cost, original)
+            read_leases = [lease for n, s in states.items()
+                           if s is State.LOAD
+                           for lease in [self.store.acquire_read(sigs[n])]
+                           if lease is not None]
+            vanished = [n for n, s in states.items()
+                        if s is State.LOAD and not self.store.has(sigs[n])]
+            if not vanished:
+                break
+            for lease in read_leases:
+                lease.release()
+            for n in vanished:
+                load_cost[n] = None
+        try:
+            # Purge stale materializations of original operators (§6.6:
+            # "Helix purges any previous materialization of original
+            # operators prior to execution"). Skipped in sweep mode, where
+            # sibling variants' same-name entries are not stale.
+            purged = 0
+            if self.purge_stale:
+                by_name = self.store.sigs_by_name()
+                for n in original:
+                    for old_sig in by_name.get(n, []):
+                        if old_sig != sigs[n]:
+                            purged += self.store.delete(old_sig)
+                self.materializer.release(purged)
 
-        # Purge stale materializations of original operators (§6.6: "Helix
-        # purges any previous materialization of original operators prior to
-        # execution").
-        purged = 0
-        by_name = self.store.sigs_by_name()
-        for n in original:
-            for old_sig in by_name.get(n, []):
-                if old_sig != sigs[n]:
-                    purged += self.store.delete(old_sig)
-        self.materializer.release(purged)
+            report = execute(
+                sliced, sigs, states, self.store, self.materializer,
+                load_shardings=load_shardings,
+                async_materialization=self.async_materialization,
+                max_workers=self.max_workers,
+                prefetch_depth=self.prefetch_depth,
+                dedupe_inflight=self.dedupe_inflight,
+                dedupe_wait_seconds=self.dedupe_wait_seconds,
+                share_sigs=share_sigs,
+                # Planner chose COMPUTE although a load existed — loading
+                # is costlier there; the dedupe shortcut must not undo it.
+                dedupe_skip={n for n, s in states.items()
+                             if s is State.COMPUTE
+                             and load_cost.get(n) is not None})
+        finally:
+            for lease in read_leases:
+                lease.release()
 
-        report = execute(
-            sliced, sigs, states, self.store, self.materializer,
-            load_shardings=load_shardings,
-            async_materialization=self.async_materialization,
-            max_workers=self.max_workers,
-            prefetch_depth=self.prefetch_depth)
-
-        # Record statistics for future iterations.
+        # Record statistics for future iterations. Nodes the in-flight
+        # dedupe turned into loads did not yield a compute measurement.
         for n, secs in report.runtime.items():
-            if states[n] is State.COMPUTE:
+            if states[n] is State.COMPUTE and n not in report.deduped:
                 self.cost_model.record(sigs[n], compute_seconds=secs)
             else:
                 self.cost_model.record(sigs[n])

@@ -11,24 +11,35 @@ the slices each device needs (``np.load(mmap_mode='r')``). That means a value
 materialized under mesh A can be restored under mesh B — the elastic-restart
 path. Non-array leaves are pickled.
 
-The store is safe for concurrent use by the pipelined executor:
+The store is safe for concurrent use by the pipelined executor *and* — new
+in fleet mode — by many sessions sharing one workdir, whether sweep threads
+in one process or independent OS processes:
 
-* ``save_enqueue`` hands a host snapshot to a dedicated **writer thread**
-  (replacing the old thread-per-save ``save_async``); in-flight bytes are
-  bounded by ``max_inflight_bytes`` so a burst of materializations cannot
-  exhaust host memory. Each :class:`PendingSave` reports the measured write
-  time, which the executor folds into ``mat_seconds``.
-* Multi-leaf values are written/read with **per-leaf parallel .npy I/O**
-  (shared small thread pool) — large pytrees saturate disk bandwidth
-  instead of serializing leaf by leaf.
-* Saves build a uniquely-named temp dir and publish it with an atomic
-  rename under the store lock, so concurrent saves of the same signature
-  are last-writer-wins and readers never observe partial entries; loads
-  retry once if they race an overwrite.
-
-The store records measured save/load wall-times and byte sizes per entry;
-these feed the cost model's ``l_i`` estimates (paper §5.1: l_i =
-bytes / store bandwidth) via a thread-safe bandwidth EWMA.
+* Every publish/delete of an entry happens under a **per-signature file
+  lock** (``flock``; see locking.py), and removal renames the entry dir to
+  a staging name before deleting it, so an entry atomically exists-whole or
+  not-at-all from any process's point of view. Loads retry once if they
+  race an overwrite.
+* An **on-disk index** (``.fleet/index.json``) mirrors the entry set and is
+  updated atomically together with each publish/delete (under the same
+  per-signature lock), making ``entries()``/``total_bytes()`` one read
+  instead of an O(entries) directory walk. A crash between dir-op and
+  index-op is healed by the rebuild every ``Store.__init__`` performs.
+* **Compute leases** (``acquire_compute`` / ``wait_compute``) give fleets
+  in-flight dedupe: the first session to need a signature takes the lease
+  and computes; others wait on it and load the published result. Leases
+  are ``flock``s, so a crashed holder's lease evaporates with its process
+  (stale-lease takeover for free). Waiters register marker files so the
+  holder knows someone is blocked on the result and can force-persist it.
+  **Read leases** (shared mode) pin entries a session plans to LOAD;
+  ``delete`` probes the lease and skips entries other sessions still need.
+* Save/load wall-times feed a **merge-on-flush EWMA** bandwidth file
+  (``.fleet/bw.json``) shared by all sessions — the cost model's ``l_i``
+  estimates (paper §5.1: l_i = bytes / store bandwidth) improve fleet-wide
+  instead of per-session.
+* ``save_enqueue`` hands a host snapshot to a dedicated **writer thread**;
+  in-flight bytes are bounded by ``max_inflight_bytes``. Multi-leaf values
+  are written/read with per-leaf parallel .npy I/O (shared small pool).
 """
 from __future__ import annotations
 
@@ -40,6 +51,7 @@ import pickle
 import shutil
 import threading
 import time
+import uuid
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable
@@ -48,11 +60,18 @@ import numpy as np
 
 import jax
 
+from .locking import FileLock, SharedEwma, read_json, update_json
+
 
 @dataclasses.dataclass
 class SaveInfo:
     nbytes: int
     seconds: float
+    # True when this save overwrote an existing entry for the signature —
+    # the caller's budget reservation then double-counts a value already
+    # paid for (e.g. two sessions raced the same signature) and should be
+    # credited back.
+    replaced: bool = False
 
 
 class PendingSave:
@@ -128,40 +147,190 @@ def _npy_storage_view(leaf: np.ndarray) -> np.ndarray:
                      [leaf.dtype.itemsize])
 
 
+class ComputeLease:
+    """Exclusive right to compute one signature fleet-wide.
+
+    Held from just before the compute starts until the value is either
+    published to the store or the holder decides not to persist it. The
+    kernel releases the underlying ``flock`` if the holder crashes, so
+    waiters take over stale leases automatically.
+    """
+
+    def __init__(self, store: "Store", sig: str, lock: FileLock):
+        self._store = store
+        self.sig = sig
+        self._lock: FileLock | None = lock
+
+    def waiters(self) -> int:
+        """How many sessions are currently blocked on this signature."""
+        return self._store._count_waiters(self.sig)
+
+    def release(self) -> None:
+        if self._lock is not None:
+            self._lock.release()
+            self._lock = None
+
+    def __enter__(self) -> "ComputeLease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+# Workdir roots this process has already healed (scan + index rebuild +
+# metadata reap). A sweep opens K Stores on one root; only the first pays
+# the O(entries) scan. A fresh process (the crash-recovery case) always
+# heals on its first open.
+_healed_roots: set[str] = set()
+_healed_roots_lock = threading.Lock()
+
+
 class Store:
     _tmp_counter = itertools.count()
 
-    def __init__(self, root: str, max_inflight_bytes: int = 1 << 30):
+    def __init__(self, root: str, max_inflight_bytes: int = 1 << 30,
+                 heal: bool | None = None):
+        """``heal`` controls the open-time crash recovery (stale-staging
+        reap, fleet-metadata reap, index rebuild from a directory scan):
+        None (default) runs it on the first open of this root in this
+        process only; True forces it; False skips it."""
         self.root = root
         os.makedirs(root, exist_ok=True)
-        self._reap_stale_tmp()
-        self._lock = threading.Lock()
-        # measured aggregate write bandwidth (bytes/s), EWMA
-        self._bw_write: float | None = None
-        self._bw_read: float | None = None
+        os.makedirs(self._fleet_dir("locks"), exist_ok=True)
+        os.makedirs(self._fleet_dir("leases"), exist_ok=True)
+        if heal is None:
+            key = os.path.realpath(root)
+            with _healed_roots_lock:
+                heal = key not in _healed_roots
+                _healed_roots.add(key)
+        # merge-on-flush measured bandwidth (bytes/s), shared fleet-wide
+        self._bw = SharedEwma(self._fleet_dir("bw.json"))
         # dedicated writer queue (overlapped materialization)
         self.max_inflight_bytes = int(max_inflight_bytes)
         self._writer_cv = threading.Condition()
         self._writer_queue: deque = deque()
         self._writer_thread: threading.Thread | None = None
         self._inflight_bytes = 0
+        if heal:
+            self._reap_stale_tmp()
+            self._reap_fleet_metadata()
+            # Heal the index after crashes (a process dying between
+            # dir-op and index-op leaves them out of sync; the scan is
+            # ground truth).
+            self.rebuild_index()
+
+    # A staging dir older than this is an orphan even if we cannot tell
+    # whether its owner pid is alive (e.g. it came from another host).
+    _TMP_ORPHAN_SECONDS = 3600.0
+
+    @staticmethod
+    def _tmp_is_orphan(path: str, name: str) -> bool:
+        """A staging dir is an orphan iff its owning process is provably
+        dead, or it is old enough that no live save can still be writing
+        it. Opening a store while sibling processes are mid-save must NOT
+        reap their live staging dirs."""
+        try:
+            pid = int(name.split(".tmp-", 1)[1].removeprefix("del-")
+                      .split("-", 1)[0] or 0)
+        except (IndexError, ValueError):
+            pid = 0
+        if pid > 0:
+            try:
+                os.kill(pid, 0)
+            except ProcessLookupError:
+                return True      # owner is gone (same host)
+            except PermissionError:
+                pass             # alive, not ours
+        try:
+            age = time.time() - os.stat(path).st_mtime
+        except OSError:
+            return False         # vanished already (owner cleaned it up)
+        return age > Store._TMP_ORPHAN_SECONDS
 
     def _reap_stale_tmp(self) -> None:
         """Remove staging dirs orphaned by a crash mid-save. They contain a
-        meta.json, so without this sweep entries()/total_bytes() would count
+        meta.json, so without this sweep a directory rescan would count
         them as phantom entries forever."""
         for sub in os.listdir(self.root):
             subdir = os.path.join(self.root, sub)
-            if not os.path.isdir(subdir):
+            if sub.startswith(".") or not os.path.isdir(subdir):
                 continue
             for name in os.listdir(subdir):
-                if ".tmp-" in name:
-                    shutil.rmtree(os.path.join(subdir, name),
-                                  ignore_errors=True)
+                path = os.path.join(subdir, name)
+                if ".tmp-" in name and self._tmp_is_orphan(path, name):
+                    shutil.rmtree(path, ignore_errors=True)
+
+    def _reap_fleet_metadata(self) -> None:
+        """Prune per-signature lock/lease files for long-gone entries,
+        dead waiter markers, and orphaned atomic-publish temp files.
+        Without this a long-lived workdir accumulates one zero-byte file
+        per signature ever seen (and _count_waiters listdirs leases/ on
+        every lease-compute). Unlinking a lock file is safe because
+        FileLock.acquire verifies it locked the inode the path names."""
+        fleet = self._fleet_dir()
+        for name in os.listdir(fleet):
+            path = os.path.join(fleet, name)
+            if ".tmp-" in name and os.path.isfile(path) \
+                    and self._tmp_is_orphan(path, name):
+                try:
+                    os.unlink(path)   # update_json crash leftovers
+                except OSError:
+                    pass
+        now = time.time()
+        for sub, suffix in (("locks", ".lock"), ("leases", ".lease")):
+            d = self._fleet_dir(sub)
+            for name in os.listdir(d):
+                path = os.path.join(d, name)
+                if sub == "leases" and ".w-" in name:
+                    if self._waiter_is_dead(path):
+                        try:
+                            os.unlink(path)
+                        except OSError:
+                            pass
+                    continue
+                if not name.endswith(suffix):
+                    continue
+                sig = name[: -len(suffix)]
+                try:
+                    age = now - os.stat(path).st_mtime
+                except OSError:
+                    continue
+                # Cold (no one can be mid-save) and entry-less: reap
+                # under the exclusive lock so no live holder is split.
+                if age <= self._TMP_ORPHAN_SECONDS or self.has(sig):
+                    continue
+                guard = FileLock(path)
+                if guard.acquire(blocking=False):
+                    try:
+                        if not self.has(sig):
+                            try:
+                                os.unlink(path)
+                            except OSError:
+                                pass
+                    finally:
+                        guard.release()
 
     # -- paths ---------------------------------------------------------------
     def _dir(self, sig: str) -> str:
         return os.path.join(self.root, sig[:2], sig)
+
+    def _fleet_dir(self, *parts: str) -> str:
+        return os.path.join(self.root, ".fleet", *parts)
+
+    def _entry_lock(self, sig: str) -> FileLock:
+        return FileLock(self._fleet_dir("locks", f"{sig}.lock"))
+
+    def _lease_path(self, sig: str) -> str:
+        return os.path.join(self._fleet_dir("leases"), f"{sig}.lease")
+
+    @property
+    def ledger_path(self) -> str:
+        """Path of the fleet-shared storage-budget ledger for this store."""
+        return self._fleet_dir("ledger.json")
+
+    @property
+    def index_path(self) -> str:
+        return self._fleet_dir("index.json")
 
     def has(self, sig: str) -> bool:
         return os.path.exists(os.path.join(self._dir(sig), "meta.json"))
@@ -173,7 +342,7 @@ class Store:
         host_value = jax.tree_util.tree_map(_leaf_to_host, value)
         d = self._dir(sig)
         # Unique temp dir: concurrent saves of one signature must not
-        # clobber each other's staging area (last rename wins below).
+        # clobber each other's staging area (last publish wins below).
         tmp = (f"{d}.tmp-{os.getpid()}-{threading.get_ident()}"
                f"-{next(self._tmp_counter)}")
         os.makedirs(tmp, exist_ok=True)
@@ -188,15 +357,29 @@ class Store:
             meta.update(extra_meta or {})
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
-            with self._lock:
-                if os.path.exists(d):
-                    shutil.rmtree(d)
+            # Publish + index update as one per-signature transaction, so
+            # the index never disagrees with the directory for a signature
+            # (concurrent save/delete of one sig serialize here).
+            with self._entry_lock(sig):
+                replaced = os.path.exists(d)
+                if replaced:
+                    self._retire_dir(d)
                 os.rename(tmp, d)
-                self._update_bw("_bw_write", nbytes, seconds)
+                self._index_apply(add={sig: self._index_entry(meta)})
+            self._update_bw("write", nbytes, seconds)
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
-        return SaveInfo(nbytes=nbytes, seconds=seconds)
+        return SaveInfo(nbytes=nbytes, seconds=seconds, replaced=replaced)
+
+    def _retire_dir(self, d: str) -> None:
+        """Crash-safe removal: rename the entry dir to a staging name (so
+        it atomically stops being an entry) before deleting its contents.
+        A crash mid-rmtree leaves only a ``.tmp-`` dir for the reaper."""
+        trash = (f"{d}.tmp-del-{os.getpid()}-{threading.get_ident()}"
+                 f"-{next(self._tmp_counter)}")
+        os.rename(d, trash)
+        shutil.rmtree(trash, ignore_errors=True)
 
     def _write_leaves(self, tmp: str, host_value: Any) -> tuple[list, int]:
         leaves, treedef = jax.tree_util.tree_flatten(host_value)
@@ -354,35 +537,183 @@ class Store:
             leaves = [load_leaf(it) for it in items]
         value = jax.tree_util.tree_unflatten(treedef, leaves)
         seconds = time.perf_counter() - t0
-        with self._lock:
-            self._update_bw("_bw_read", meta["nbytes"], seconds)
+        self._update_bw("read", meta["nbytes"], seconds)
         return value, seconds
+
+    # -- compute / read leases (in-flight dedupe) --------------------------------
+    def acquire_compute(self, sig: str) -> ComputeLease | None:
+        """Try to take the fleet-wide compute lease for ``sig``.
+
+        Returns a :class:`ComputeLease` when this caller should compute the
+        value, or ``None`` when another session currently holds the lease
+        (→ ``wait_compute`` and then load-or-retry)."""
+        lock = FileLock(self._lease_path(sig))
+        if lock.acquire(blocking=False):
+            return ComputeLease(self, sig, lock)
+        return None
+
+    def wait_compute(self, sig: str, timeout: float | None = None) -> bool:
+        """Block until the current compute lease on ``sig`` is released.
+
+        Registers a waiter marker first, so the lease holder knows the
+        result is wanted fleet-wide and force-persists it before releasing.
+        Returns False on timeout (the caller should fall back to computing
+        the value itself — bounded waits keep the fleet deadlock-free even
+        under pathological cross-session lease chains)."""
+        marker = os.path.join(self._fleet_dir("leases"),
+                              f"{sig}.w-{uuid.uuid4().hex}")
+        try:
+            with open(marker, "w") as f:
+                f.write(str(os.getpid()))
+            waiter = FileLock(self._lease_path(sig), shared=True)
+            if waiter.acquire(timeout=timeout):
+                waiter.release()
+                return True
+            return False
+        finally:
+            try:
+                os.unlink(marker)
+            except OSError:
+                pass
+
+    @staticmethod
+    def _waiter_is_dead(path: str) -> bool:
+        """A waiter marker is stale iff its recorded pid is provably dead
+        (same host) or the marker outlived any plausible lease wait."""
+        try:
+            pid = int(open(path).read().strip() or 0)
+        except (OSError, ValueError):
+            pid = 0
+        if pid > 0:
+            try:
+                os.kill(pid, 0)
+            except ProcessLookupError:
+                return True
+            except PermissionError:
+                pass  # alive, different user
+        try:
+            return (time.time() - os.stat(path).st_mtime
+                    > Store._TMP_ORPHAN_SECONDS)
+        except OSError:
+            return False  # already unlinked by its owner
+
+    def _count_waiters(self, sig: str) -> int:
+        prefix = f"{sig}.w-"
+        n = 0
+        try:
+            names = os.listdir(self._fleet_dir("leases"))
+        except FileNotFoundError:
+            return 0
+        for name in names:
+            if not name.startswith(prefix):
+                continue
+            path = os.path.join(self._fleet_dir("leases"), name)
+            if self._waiter_is_dead(path):
+                # Crashed waiter (SIGKILL before its finally-unlink):
+                # reap so it cannot force-persist values forever.
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+                continue
+            n += 1
+        return n
+
+    def any_live_lease(self) -> bool:
+        """Is any signature's lease (compute or read pin) currently held?
+        Used as a guard before fleet-wide maintenance like a ledger
+        reconcile — a held lease means another session is mid-run."""
+        try:
+            names = os.listdir(self._fleet_dir("leases"))
+        except FileNotFoundError:
+            return False
+        for name in names:
+            if not name.endswith(".lease"):
+                continue
+            if FileLock(os.path.join(self._fleet_dir("leases"), name)
+                        ).locked_elsewhere():
+                return True
+        return False
+
+    def acquire_read(self, sig: str) -> FileLock | None:
+        """Pin ``sig`` against eviction (shared lease; see ``delete``).
+        Non-blocking: returns None when the signature is being computed
+        right now (then there is nothing on disk to pin yet anyway)."""
+        lock = FileLock(self._lease_path(sig), shared=True)
+        if lock.acquire(blocking=False):
+            return lock
+        return None
 
     # -- metadata / management ---------------------------------------------------
     def meta(self, sig: str) -> dict:
         with open(os.path.join(self._dir(sig), "meta.json")) as f:
             return json.load(f)
 
-    def delete(self, sig: str) -> int:
-        with self._lock:
-            d = self._dir(sig)
-            if not os.path.exists(d):
-                return 0
-            try:
-                with open(os.path.join(d, "meta.json")) as f:
-                    nbytes = json.load(f).get("nbytes", 0)
-            except (FileNotFoundError, json.JSONDecodeError):
-                nbytes = 0
-            shutil.rmtree(d, ignore_errors=True)
-            return nbytes
+    def delete(self, sig: str, respect_leases: bool = True) -> int:
+        """Remove an entry; returns bytes freed (0 if absent or leased).
 
-    def entries(self) -> dict[str, dict]:
+        With ``respect_leases`` (default), entries another session is
+        actively computing or has pinned for a planned LOAD are left alone
+        — fleet eviction must not yank values out from under a live
+        session. The exclusive lease is *held* for the duration of the
+        removal (not probed and dropped), so a read pin can never slip in
+        between the check and the delete."""
+        lease_guard = None
+        if respect_leases:
+            lease_guard = FileLock(self._lease_path(sig))
+            if not lease_guard.acquire(blocking=False):
+                return 0
+        try:
+            with self._entry_lock(sig):
+                d = self._dir(sig)
+                if not os.path.exists(d):
+                    return 0
+                try:
+                    with open(os.path.join(d, "meta.json")) as f:
+                        nbytes = json.load(f).get("nbytes", 0)
+                except (FileNotFoundError, json.JSONDecodeError):
+                    nbytes = 0
+                self._retire_dir(d)
+                self._index_apply(remove=[sig])
+                return nbytes
+        finally:
+            if lease_guard is not None:
+                lease_guard.release()
+
+    # -- on-disk index ------------------------------------------------------------
+    @staticmethod
+    def _index_entry(meta: dict) -> dict:
+        return {"name": meta.get("name"), "nbytes": meta.get("nbytes", 0),
+                "created": meta.get("created", 0.0)}
+
+    def _index_apply(self, add: dict[str, dict] | None = None,
+                     remove: list[str] | None = None) -> None:
+        def txn(index):
+            index.update(add or {})
+            for sig in remove or ():
+                index.pop(sig, None)
+            return index
+
+        update_json(self.index_path, txn, {})
+
+    def rebuild_index(self) -> dict[str, dict]:
+        """Reconcile the index with a directory scan (ground truth). Runs
+        inside the index lock so concurrent publishes are not lost: they
+        either precede the scan (and are seen) or follow the write (and
+        re-add themselves)."""
+        return update_json(
+            self.index_path,
+            lambda _cur: {sig: self._index_entry(m)
+                          for sig, m in self._scan_entries().items()},
+            {})
+
+    def _scan_entries(self) -> dict[str, dict]:
         out = {}
         if not os.path.exists(self.root):
             return out
         for sub in sorted(os.listdir(self.root)):
             subdir = os.path.join(self.root, sub)
-            if not os.path.isdir(subdir):
+            if sub.startswith(".") or not os.path.isdir(subdir):
                 continue
             for sig in sorted(os.listdir(subdir)):
                 if ".tmp-" in sig:
@@ -391,9 +722,20 @@ class Store:
                 try:
                     with open(mp) as f:
                         out[sig] = json.load(f)
-                except (FileNotFoundError, NotADirectoryError):
+                except (FileNotFoundError, NotADirectoryError,
+                        json.JSONDecodeError):
                     continue  # raced a concurrent delete / in-progress save
         return out
+
+    def entries(self) -> dict[str, dict]:
+        """Entry metadata by signature, served from the on-disk index
+        (one atomic read; kept transactionally in sync by save/delete).
+        A missing index (deleted out of band, or healing skipped) is
+        rebuilt from the directory scan on demand."""
+        index = read_json(self.index_path, None)
+        if index is None:
+            index = self.rebuild_index()
+        return index
 
     def sigs_by_name(self) -> dict[str, list[str]]:
         by: dict[str, list[str]] = {}
@@ -405,16 +747,14 @@ class Store:
         return sum(m.get("nbytes", 0) for m in self.entries().values())
 
     # -- bandwidth model (feeds l_i estimates) ------------------------------------
-    def _update_bw(self, attr: str, nbytes: int, seconds: float) -> None:
-        # Callers hold self._lock, keeping the EWMA race-free under the
-        # pipelined executor's concurrent saves/loads.
+    def _update_bw(self, key: str, nbytes: int, seconds: float) -> None:
+        # Merge-on-flush: the observation is EWMA-blended into the shared
+        # on-disk estimate under its lock, so concurrent sessions (and the
+        # pipelined executor's worker threads) refine one number.
         if seconds <= 0 or nbytes <= 0:
             return
-        bw = nbytes / seconds
-        cur = getattr(self, attr)
-        setattr(self, attr, bw if cur is None else 0.7 * cur + 0.3 * bw)
+        self._bw.update(key, nbytes / seconds)
 
     def est_load_seconds(self, nbytes: float) -> float:
-        with self._lock:
-            bw = self._bw_read or self._bw_write or 500e6  # default 500 MB/s
+        bw = self._bw.get("read") or self._bw.get("write") or 500e6
         return nbytes / bw + 1e-4

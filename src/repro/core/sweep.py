@@ -1,0 +1,253 @@
+"""Shared-store concurrent sweep engine: many sessions, one cache.
+
+Helix (the paper) optimizes *one* developer's iteration loop. This driver
+turns the same machinery into fleet-scale reuse, following "Exploiting
+Reuse in Pipeline-Aware Hyperparameter Tuning" (Li et al., 2019) and
+"Accelerating Human-in-the-loop Machine Learning" (Xin et al., 2018): run
+N workflow *variants* (a knob grid or random search) concurrently against
+one shared materialization store. Variants that share a DAG prefix share
+its signatures, so:
+
+* the first variant to need a shared signature computes it under the
+  store's **compute lease** and force-persists it for the registered
+  waiters — each shared signature is computed exactly once fleet-wide;
+* every other variant either waits-and-loads (in-flight dedupe) or, if it
+  plans after the value landed, gets a plain OEP LOAD from the max-flow
+  planner;
+* the storage budget is enforced through the store's **shared ledger**,
+  and the §6.6 stale-purge is disabled (sibling variants' same-name
+  entries are not stale — and deletes respect live leases regardless).
+
+Nondeterministic operators normally draw a fresh signature nonce per
+compilation and can never be shared. ``share_nondet=True`` (default) pins
+one nonce map for the whole sweep — morally "fix the seed for this sweep":
+identical unseeded operators across variants become equivalent and are
+computed once. Disable it for strictly independent per-variant randomness.
+
+Concurrency is thread-based (JAX is fork-hostile); the store machinery
+underneath is ``flock``-based, so independent OS processes pointed at the
+same workdir compose the same way — this driver is just the convenient
+in-process harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import threading
+import time
+import uuid
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Mapping, Sequence
+
+from .locking import StorageLedger
+from .omp import Policy
+from .session import IterationReport, IterativeSession
+from .signature import compute_signatures
+from .store import Store
+from .workflow import Workflow
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepVariant:
+    """One arm of the sweep: a label plus a zero-arg Workflow factory."""
+
+    name: str
+    build: Callable[[], Workflow]
+    knobs: Any = None  # the knob value(s) this arm represents, for reports
+
+
+def grid(base: Any, axes: Mapping[str, Sequence[Any]],
+         build: Callable[[Any], Workflow],
+         name: str = "variant") -> list[SweepVariant]:
+    """Cartesian-product knob grid over a frozen knob dataclass.
+
+    ``axes`` maps field names to candidate values; each combination yields
+    a :class:`SweepVariant` whose factory builds the workflow from
+    ``dataclasses.replace(base, **combo)``.
+    """
+    keys = list(axes)
+    out = []
+    for combo in itertools.product(*(axes[k] for k in keys)):
+        knobs = dataclasses.replace(base, **dict(zip(keys, combo)))
+        label = name + "".join(f"_{k}={v}" for k, v in zip(keys, combo))
+        out.append(SweepVariant(name=label,
+                                build=(lambda kn=knobs: build(kn)),
+                                knobs=knobs))
+    return out
+
+
+def random_search(base: Any, mutate: Callable[[Any, Any], Any], n: int,
+                  rng: Any, build: Callable[[Any], Workflow],
+                  name: str = "rand") -> list[SweepVariant]:
+    """N variants drawn by repeatedly applying ``mutate(knobs, rng)``."""
+    out, cur = [], base
+    for i in range(n):
+        out.append(SweepVariant(name=f"{name}{i}",
+                                build=(lambda kn=cur: build(kn)),
+                                knobs=cur))
+        cur = mutate(cur, rng)
+    return out
+
+
+class _SharedNonces:
+    """Sweep-wide nonce map for nondeterministic nodes: first access per
+    node name draws the nonce, every variant then reuses it (signatures
+    still differ across variants whose node *versions* differ)."""
+
+    def __init__(self) -> None:
+        self._nonces: dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def get(self, name: str, default: str | None = None) -> str:
+        with self._lock:
+            if name not in self._nonces:
+                self._nonces[name] = uuid.uuid4().hex
+            return self._nonces[name]
+
+
+@dataclasses.dataclass
+class VariantResult:
+    variant: SweepVariant
+    report: IterationReport | None
+    seconds: float
+    error: BaseException | None = None
+
+    @property
+    def outputs(self) -> dict[str, Any]:
+        return {} if self.report is None else self.report.outputs
+
+
+@dataclasses.dataclass
+class SweepReport:
+    results: list[VariantResult]
+    wall_seconds: float
+    store_bytes: int
+
+    @property
+    def outputs(self) -> dict[str, dict[str, Any]]:
+        return {r.variant.name: r.outputs for r in self.results}
+
+    def fleet_computes(self) -> dict[str, int]:
+        """How many variants actually *computed* each signature (planned
+        COMPUTE and not turned into a load by the in-flight dedupe).
+        With dedupe on, shared signatures must all be 1."""
+        from .dag import State
+        counts: dict[str, int] = {}
+        for r in self.results:
+            if r.report is None:
+                continue
+            ex = r.report.execution
+            for n, s in ex.states.items():
+                if s is State.COMPUTE and n not in ex.deduped:
+                    sig = r.report.sigs[n]
+                    counts[sig] = counts.get(sig, 0) + 1
+        return counts
+
+    def raise_errors(self) -> None:
+        for r in self.results:
+            if r.error is not None:
+                raise r.error
+
+
+def run_sweep(workdir: str,
+              variants: Sequence[SweepVariant],
+              *,
+              n_concurrent: int | None = None,
+              policy: Policy = Policy.OPT,
+              storage_budget_bytes: float = float("inf"),
+              max_workers: int = 1,
+              prefetch_depth: int = 4,
+              async_materialization: bool = False,
+              share_nondet: bool = True,
+              dedupe_inflight: bool = True,
+              dedupe_wait_seconds: float = 3600.0,
+              horizon: float | None = None) -> SweepReport:
+    """Run every variant against one shared store in ``workdir``.
+
+    Each variant gets its own :class:`IterativeSession` over the *same*
+    workdir (shared store, shared cost statistics, shared budget ledger),
+    with in-flight dedupe on and stale-purging off. ``n_concurrent`` bounds
+    how many variants run at once (default: all); ``max_workers`` /
+    ``prefetch_depth`` / ``async_materialization`` are forwarded to each
+    session's pipelined executor.
+
+    ``horizon`` defaults to the number of variants: a materialized shared
+    value is expected to be reused by roughly every sibling, which is
+    exactly the amortization OMP's threshold wants (see omp.py).
+    ``dedupe_wait_seconds`` (default 1 h) must exceed the longest shared
+    node's compute time, or waiters time out and duplicate it — it is
+    only the escape hatch that keeps a crashed-but-lease-holding-via-NFS
+    style pathology from stalling the sweep forever.
+    """
+    variants = list(variants)
+    if not variants:
+        return SweepReport(results=[], wall_seconds=0.0, store_bytes=0)
+    n_concurrent = len(variants) if n_concurrent is None \
+        else max(1, int(n_concurrent))
+    nonces = _SharedNonces() if share_nondet else None
+    hz = float(len(variants)) if horizon is None else horizon
+
+    # Pre-pass: compile every variant's DAG once (cheap — node declaration
+    # only) to learn which signatures recur across variants. Those are the
+    # shared prefixes; the executor force-persists them on lease-compute so
+    # each is computed exactly once fleet-wide even without a waiter racing
+    # the holder. Signatures are stable across the re-compilation inside
+    # each session because the nonce map is pinned.
+    sig_count: dict[str, int] = {}
+    for v in variants:
+        for sig in set(compute_signatures(v.build().build(),
+                                          nonces=nonces).values()):
+            sig_count[sig] = sig_count.get(sig, 0) + 1
+    share_sigs = frozenset(s for s, c in sig_count.items() if c >= 2)
+
+    # Open (and heal) the store once before the fleet does, and reconcile
+    # the shared budget ledger with what is actually on disk — sessions
+    # without a ledger (or crashes between reserve and save) let the
+    # on-disk used-bytes drift upward, which would otherwise starve every
+    # future sweep's materializations. No sibling of THIS sweep has
+    # started yet; a held lease means some OTHER process's fleet is
+    # mid-run on this workdir, and its live reservations must not be
+    # erased — skip the reconcile then (drift heals on the next quiet
+    # open instead).
+    store = Store(os.path.join(workdir, "store"))
+    if not store.any_live_lease():
+        StorageLedger(store.ledger_path).reset(float(store.total_bytes()))
+
+    def run_one(variant: SweepVariant) -> VariantResult:
+        t0 = time.perf_counter()
+        try:
+            sess = IterativeSession(
+                workdir, policy=policy,
+                storage_budget_bytes=storage_budget_bytes,
+                async_materialization=async_materialization,
+                horizon=hz, max_workers=max_workers,
+                prefetch_depth=prefetch_depth,
+                dedupe_inflight=dedupe_inflight,
+                dedupe_wait_seconds=dedupe_wait_seconds,
+                shared_budget=True, purge_stale=False,
+                nondet_reusable=share_nondet)
+            report = sess.run(variant.build(), nonces=nonces,
+                              share_sigs=share_sigs)
+            return VariantResult(variant=variant, report=report,
+                                 seconds=time.perf_counter() - t0)
+        except BaseException as e:
+            return VariantResult(variant=variant, report=None,
+                                 seconds=time.perf_counter() - t0, error=e)
+
+    t_start = time.perf_counter()
+    if n_concurrent == 1:
+        results = [run_one(v) for v in variants]
+    else:
+        with ThreadPoolExecutor(
+                max_workers=n_concurrent,
+                thread_name_prefix="helix-sweep") as pool:
+            results = list(pool.map(run_one, variants))
+    wall = time.perf_counter() - t_start
+
+    store_bytes = 0
+    for r in results:
+        if r.report is not None:
+            store_bytes = max(store_bytes, r.report.store_bytes)
+    return SweepReport(results=results, wall_seconds=wall,
+                       store_bytes=store_bytes)

@@ -1,0 +1,12 @@
+"""jax-version compatibility shims shared by the Pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+kernels were written against the new name, CI runners pin a jax that only
+has the old one. Resolve whichever exists once, here.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
 
 
 def _kernel(x_ref, dt_ref, cs_ref, b_ref, c_ref, y_ref, st_ref, *, L: int):
@@ -91,7 +92,7 @@ def ssd_chunk_pallas(x: jax.Array, dt: jax.Array, cs: jax.Array,
             jax.ShapeDtypeStruct((bsz, S, H, P), jnp.float32),
             jax.ShapeDtypeStruct((bsz, nc, H, N, P), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(x, dt, cs, B, C)

@@ -16,8 +16,6 @@ Sharding policy summary (see DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

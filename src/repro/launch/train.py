@@ -94,8 +94,6 @@ def main() -> None:
         if args.resume:
             latest = ckpt.latest_step()
             if latest is not None:
-                flat_sh = jax.tree_util.tree_leaves(pshard)
-
                 def shard_for(i, shape, dtype, _fs=None):
                     return None   # restore to host, device_put below
                 state = ckpt.restore(latest)

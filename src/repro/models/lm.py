@@ -16,12 +16,10 @@ family; prefill fills it in one forward.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import layers, moe as moe_lib, ssd as ssd_lib
 from .config import ArchConfig

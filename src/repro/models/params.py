@@ -14,7 +14,7 @@ axis names + init). From that single description we derive:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ KV/SSM cache in one forward; decode advances one token against it.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -2,7 +2,6 @@
 lower+compile of each step kind (1-device mesh — the 512-device sweep runs
 via ``python -m repro.launch.dryrun``, not in the test suite)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro import configs

@@ -13,7 +13,7 @@ from repro.core.pruning import zero_weight_extractors
 from repro.models import layers
 from repro.models.config import MoECfg
 from repro.models.moe import moe_block, moe_defs
-from repro.models.params import P, init_params
+from repro.models.params import init_params
 
 KEY = jax.random.PRNGKey(0)
 

@@ -1,5 +1,4 @@
 """OPT-MAT-PLAN: Algorithm 2 threshold, budget, policies, paper §5.3 notes."""
-import numpy as np
 
 from repro.core.dag import DAG, Node, State
 from repro.core.omp import Materializer, Policy, cumulative_runtime

@@ -1,5 +1,6 @@
 """Pipelined ready-set executor: determinism vs the sequential engine,
 prefetch bounding, writer-queue accounting, and store thread-safety."""
+import os
 import threading
 
 import numpy as np
@@ -253,15 +254,26 @@ def test_store_concurrent_save_load_delete_same_prefix(tmp_path):
 
 
 def test_stale_tmp_dirs_reaped_and_not_counted(tmp_path):
+    import subprocess
+
     store = Store(str(tmp_path))
     store.save("ee55", "x", np.zeros(16))
-    # simulate a crash mid-save: orphaned staging dir holding a meta.json
-    stale = tmp_path / "ee" / "ee56.tmp-123-456-0"
+    # simulate a crash mid-save: an orphaned staging dir (owned by a
+    # provably dead pid) holding a meta.json
+    proc = subprocess.Popen(["true"])
+    proc.wait()
+    stale = tmp_path / "ee" / f"ee56.tmp-{proc.pid}-456-0"
     stale.mkdir(parents=True)
     (stale / "meta.json").write_text('{"name": "ghost", "nbytes": 999}')
     assert set(store.entries()) == {"ee55"}   # never counted as an entry
-    assert set(Store(str(tmp_path)).entries()) == {"ee55"}
-    assert not stale.exists()                 # reaped on reopen
+    assert set(Store(str(tmp_path), heal=True).entries()) == {"ee55"}
+    assert not stale.exists()                 # reaped on healing reopen
+
+    # a staging dir owned by a *live* process must never be reaped
+    live = tmp_path / "ee" / f"ee57.tmp-{os.getpid()}-456-0"
+    live.mkdir(parents=True)
+    Store(str(tmp_path), heal=True)
+    assert live.exists()
 
 
 def test_writer_queue_bounded_and_ordered(tmp_path):

@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.core import IterativeSession, Policy, Workflow
-from repro.core.dag import State
 
 CALLS = {"parse": 0, "feat": 0, "model": 0}
 
@@ -89,7 +88,6 @@ def test_restart_resumes_from_store(tmp_path):
 def test_purge_on_change(tmp_path):
     sess = IterativeSession(str(tmp_path))
     sess.run(make_wf(reg=0.1))
-    before = set(sess.store.entries())
     r = sess.run(make_wf(reg=0.7))
     # stale 'model'/'eval' materializations purged
     assert r.purged_bytes > 0

@@ -2,7 +2,6 @@
 batch/cache specs — resolved against an AbstractMesh (no 256 devices needed).
 """
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
 from conftest import make_abstract_mesh

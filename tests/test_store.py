@@ -1,6 +1,5 @@
 """Materialization store: roundtrips, resharding loads, management."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

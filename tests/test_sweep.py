@@ -1,0 +1,220 @@
+"""Sweep engine: cross-variant reuse over one shared store.
+
+Correctness bar (ISSUE 2 acceptance): a K-variant sweep sharing one store
+produces outputs bit-identical to K isolated cold runs, and computes each
+shared-prefix signature exactly once fleet-wide.
+"""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (IterativeSession, Policy, SweepVariant, grid,
+                        run_sweep)
+from repro.core.locking import HAVE_FLOCK, StorageLedger
+from repro.core.workflow import Workflow
+
+pytestmark = pytest.mark.skipif(
+    not HAVE_FLOCK, reason="fleet mode needs POSIX flock")
+
+
+class Calls:
+    """Thread-safe per-node compute counters."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counts: dict[str, int] = {}
+
+    def hit(self, name: str) -> None:
+        with self._lock:
+            self.counts[name] = self.counts.get(name, 0) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ToyKnobs:
+    reg: float = 0.1
+    bias: float = 0.0
+
+
+def build_toy(k: ToyKnobs, calls: Calls | None = None) -> Workflow:
+    """source → parse → feat (slow, shared) → model(reg) → eval(bias):
+    everything up to ``feat`` is knob-independent, i.e. the shared
+    prefix; the learner/eval tail differs per variant."""
+    def count(name):
+        if calls is not None:
+            calls.hit(name)
+
+    wf = Workflow("toy")
+    src = wf.source(
+        "src", lambda: (count("src"), np.arange(4096, dtype=np.float64))[1],
+        config="v1")
+    parsed = wf.scanner(
+        "parse", lambda x: (count("parse"), x.reshape(64, 64))[1],
+        [src], config="v1")
+
+    def featurize(m):
+        count("feat")
+        acc = m.copy()
+        # Heavy enough (~100ms) that a 32 KB store LOAD decisively beats
+        # recomputing even when a loaded machine makes the measured store
+        # bandwidth look terrible — the OEP planner must pick LOAD for
+        # late arrivals by economics, not by luck.
+        for _ in range(2000):
+            acc = np.tanh(acc @ m.T @ m / m.size)
+        return acc
+
+    feat = wf.extractor("feat", featurize, [parsed], config="v1")
+    model = wf.learner(
+        "model",
+        lambda z, reg=k.reg: (count("model"), float(np.sum(z * z)) * reg)[1],
+        [feat], config=("LR", k.reg))
+    out = wf.reducer(
+        "eval",
+        lambda m, b=k.bias: (count("eval"), {"score": m + b})[1],
+        [model], config=("eval", k.bias))
+    wf.output(out)
+    return wf
+
+
+REGS = [0.1, 0.2, 0.4]
+
+
+def _variants(calls=None):
+    return [SweepVariant(name=f"reg{r}",
+                         build=(lambda r=r: build_toy(ToyKnobs(reg=r),
+                                                      calls)),
+                         knobs=ToyKnobs(reg=r))
+            for r in REGS]
+
+
+def test_sweep_bit_identical_to_isolated_cold_runs(tmp_path):
+    sweep = run_sweep(str(tmp_path / "shared"), _variants())
+    sweep.raise_errors()
+    isolated = {}
+    for r in REGS:
+        sess = IterativeSession(str(tmp_path / f"iso{r}"))
+        isolated[f"reg{r}"] = sess.run(build_toy(ToyKnobs(reg=r))).outputs
+    assert sweep.outputs == isolated   # bit-identical, not approx
+
+
+def test_sweep_computes_shared_prefix_exactly_once(tmp_path):
+    calls = Calls()
+    sweep = run_sweep(str(tmp_path), _variants(calls))
+    sweep.raise_errors()
+    # Shared-prefix operators ran once fleet-wide; per-variant tails ran K×.
+    assert calls.counts["feat"] == 1
+    assert calls.counts["src"] == 1
+    assert calls.counts["parse"] == 1
+    assert calls.counts["model"] == len(REGS)
+    assert calls.counts["eval"] == len(REGS)
+    # and the report agrees: no signature was computed by two variants
+    assert all(n == 1 for n in sweep.fleet_computes().values())
+
+
+def test_sweep_shared_budget_respected(tmp_path):
+    budget = 40_000  # fits ~one 64×64 float64 feat value, not much more
+    sweep = run_sweep(str(tmp_path), _variants(),
+                      storage_budget_bytes=budget)
+    sweep.raise_errors()
+    assert all(r.report is not None for r in sweep.results)
+    # the shared on-disk ledger never exceeded the budget
+    from repro.core import Store
+    store = Store(str(tmp_path / "store"))
+    assert store.total_bytes() <= budget
+    assert 0 <= StorageLedger(store.ledger_path).used() <= budget
+
+
+def test_sweep_sequential_arrival_reuses_store(tmp_path):
+    """n_concurrent=1: later variants arrive after the prefix landed and
+    the OEP planner turns it into plain LOADs — reuse without any lease
+    contention."""
+    calls = Calls()
+    sweep = run_sweep(str(tmp_path), _variants(calls), n_concurrent=1)
+    sweep.raise_errors()
+    assert calls.counts["feat"] == 1
+    later = [r.report for r in sweep.results[1:]]
+    assert all(rep.execution.n_loaded >= 1 for rep in later)
+
+
+def test_sweep_shared_nondet_nonces(tmp_path):
+    """share_nondet pins one nonce per node name sweep-wide: the unseeded
+    featurizer runs once and every variant sees the same draw."""
+    calls = Calls()
+
+    def build_nd(scale):
+        wf = Workflow("nd")
+        src = wf.source("src", lambda: np.ones(512), config="v1")
+
+        def noisy(x):
+            calls.hit("noisy")
+            return x * np.random.default_rng().uniform(0.5, 1.5, x.shape)
+
+        feat = wf.extractor("noisy", noisy, [src], config="n1",
+                            deterministic=False)
+        out = wf.reducer("out",
+                         lambda z, s=scale: {"v": float(z.sum()) * s},
+                         [feat], config=("s", scale))
+        wf.output(out)
+        return wf
+
+    scales = [1.0, 2.0, 4.0]
+    variants = [SweepVariant(name=f"s{s}", build=(lambda s=s: build_nd(s)))
+                for s in scales]
+    sweep = run_sweep(str(tmp_path / "pinned"), variants)
+    sweep.raise_errors()
+    assert calls.counts["noisy"] == 1
+    vals = [sweep.outputs[f"s{s}"]["out"]["v"] / s for s in scales]
+    assert vals[0] == vals[1] == vals[2]   # same underlying draw
+
+    # independent mode: every variant draws (and computes) its own
+    calls2 = Calls()
+
+    def build_nd2(scale):
+        wf = Workflow("nd")
+        src = wf.source("src", lambda: np.ones(512), config="v1")
+
+        def noisy(x):
+            calls2.hit("noisy")
+            return x * np.random.default_rng().uniform(0.5, 1.5, x.shape)
+
+        feat = wf.extractor("noisy", noisy, [src], config="n1",
+                            deterministic=False)
+        out = wf.reducer("out",
+                         lambda z, s=scale: {"v": float(z.sum()) * s},
+                         [feat], config=("s", scale))
+        wf.output(out)
+        return wf
+
+    variants2 = [SweepVariant(name=f"s{s}", build=(lambda s=s: build_nd2(s)))
+                 for s in scales]
+    sweep2 = run_sweep(str(tmp_path / "indep"), variants2,
+                       share_nondet=False)
+    sweep2.raise_errors()
+    assert calls2.counts["noisy"] == len(scales)
+
+
+def test_grid_helper():
+    vs = grid(ToyKnobs(), {"reg": [0.1, 0.2], "bias": [0.0, 1.0]},
+              build=lambda k: build_toy(k))
+    assert len(vs) == 4
+    assert {v.knobs.reg for v in vs} == {0.1, 0.2}
+    assert {v.knobs.bias for v in vs} == {0.0, 1.0}
+    wf = vs[0].build()
+    assert "feat" in wf.build().nodes
+
+
+def test_sweep_policies_and_reuse_second_wave(tmp_path):
+    """A second sweep over the same workdir (e.g. a refined grid) reuses
+    the first wave's materializations through ordinary OEP planning."""
+    calls = Calls()
+    run_sweep(str(tmp_path), _variants(calls)).raise_errors()
+    assert calls.counts["feat"] == 1
+    second = [SweepVariant(name="reg9",
+                           build=(lambda: build_toy(ToyKnobs(reg=0.9),
+                                                    calls)))]
+    sweep2 = run_sweep(str(tmp_path), second, policy=Policy.OPT)
+    sweep2.raise_errors()
+    assert calls.counts["feat"] == 1   # loaded, not recomputed
+    rep = sweep2.results[0].report
+    assert rep.execution.n_loaded >= 1
