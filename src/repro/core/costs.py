@@ -23,6 +23,14 @@ atomically. Values merely read from disk at init are NOT re-merged — that
 would let a stale historical number partially revert a sibling's fresher
 measurement. Sessions refine a shared model instead of clobbering each
 other's flushes.
+
+Observed reuse: every time a signature's value is *reused* (a planned LOAD
+or an in-flight dedupe hit) the model counts it. ``reuse_count`` feeds
+OMP's amortized materialization threshold (see omp.py ``multiplicity``):
+a signature the fleet has historically loaded seven times is worth
+materializing even when no sibling is live right now. Reuse counts are
+merged additively on flush (each session contributes the events it
+witnessed; they are disjoint by construction).
 """
 from __future__ import annotations
 
@@ -37,6 +45,10 @@ _MERGE_NEW = 0.7
 
 
 class CostModel:
+    """Per-signature operator statistics (compute seconds, output bytes,
+    seen-set for change tracking, observed reuse counts), persisted to one
+    JSON file with fleet-safe merge-on-flush semantics."""
+
     def __init__(self, path: str):
         self.path = path
         self._lock = threading.Lock()
@@ -44,9 +56,13 @@ class CostModel:
         self.compute_s: dict[str, float] = blob.get("compute_s", {})
         self.nbytes: dict[str, float] = blob.get("nbytes", {})
         self.seen: set[str] = set(blob.get("seen", []))
+        self.reuse: dict[str, float] = blob.get("reuse", {})
         # signatures recorded by THIS session since the last flush — the
         # only ones whose values save() pushes into the shared file
         self._dirty: set[str] = set()
+        # reuse events witnessed here since the last flush (merged
+        # additively: sessions witness disjoint events)
+        self._reuse_delta: dict[str, float] = {}
 
     def _merge_stat(self, disk: dict[str, float], mine: dict[str, float]
                     ) -> dict[str, float]:
@@ -63,14 +79,23 @@ class CostModel:
         return out
 
     def save(self) -> None:
+        """Flush this session's fresh statistics into the shared file
+        (merge-on-flush; see the module docstring) and adopt the merged
+        fleet view."""
         with self._lock:
             def txn(blob):
+                reuse = dict(blob.get("reuse", {}))
+                for sig, delta in self._reuse_delta.items():
+                    reuse[sig] = float(reuse.get(sig, 0.0)) + delta
+                for sig, v in self.reuse.items():
+                    reuse.setdefault(sig, v)   # keep knowledge from init
                 return {
                     "compute_s": self._merge_stat(
                         blob.get("compute_s", {}), self.compute_s),
                     "nbytes": self._merge_stat(
                         blob.get("nbytes", {}), self.nbytes),
                     "seen": sorted(set(blob.get("seen", [])) | self.seen),
+                    "reuse": reuse,
                 }
 
             merged = update_json(self.path, txn, {})
@@ -79,22 +104,39 @@ class CostModel:
             self.compute_s = dict(merged["compute_s"])
             self.nbytes = dict(merged["nbytes"])
             self.seen = set(merged["seen"])
+            self.reuse = dict(merged["reuse"])
             self._dirty.clear()
+            self._reuse_delta.clear()
 
     # -- recording -------------------------------------------------------------
     def record(self, sig: str, compute_seconds: float | None = None,
-               nbytes: float | None = None) -> None:
-        if compute_seconds is not None:
-            self.compute_s[sig] = compute_seconds
-            self._dirty.add(sig)
-        if nbytes is not None:
-            self.nbytes[sig] = nbytes
-            self._dirty.add(sig)
-        self.seen.add(sig)
+               nbytes: float | None = None, reused: bool = False) -> None:
+        """Record an execution observation for ``sig``. ``reused`` marks a
+        reuse event (the value was loaded instead of computed).
+
+        Holds the model lock for the whole update: the session server
+        shares one CostModel across concurrent job threads, so a record
+        must never interleave with a sibling's ``save()`` (whose merge
+        iterates these dicts and then clears the dirty set — an unlocked
+        record in that window would be silently dropped)."""
+        with self._lock:
+            if compute_seconds is not None:
+                self.compute_s[sig] = compute_seconds
+                self._dirty.add(sig)
+            if nbytes is not None:
+                self.nbytes[sig] = nbytes
+                self._dirty.add(sig)
+            if reused:
+                self.reuse[sig] = self.reuse.get(sig, 0.0) + 1.0
+                self._reuse_delta[sig] = \
+                    self._reuse_delta.get(sig, 0.0) + 1.0
+            self.seen.add(sig)
 
     # -- queries ---------------------------------------------------------------
     def compute_cost(self, sig: str, hint: float | None = None,
                      default: float = 1.0) -> float:
+        """Estimated compute seconds for ``sig``: measured if known, else
+        the caller's ``hint`` (e.g. a roofline dry-run), else ``default``."""
         if sig in self.compute_s:
             return self.compute_s[sig]
         if hint is not None:
@@ -102,4 +144,9 @@ class CostModel:
         return default
 
     def is_original(self, sig: str) -> bool:
+        """Paper §4.2: has this signature never been executed before?"""
         return sig not in self.seen
+
+    def reuse_count(self, sig: str) -> float:
+        """Observed lifetime reuse events for ``sig`` (fleet-merged)."""
+        return float(self.reuse.get(sig, 0.0))

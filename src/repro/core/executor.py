@@ -85,6 +85,11 @@ class ExecutionReport:
     # COMPUTE-planned nodes whose value was in fact loaded because another
     # session computed the same signature first (in-flight dedupe).
     deduped: dict[str, str] = dataclasses.field(default_factory=dict)
+    # Nodes the planner chose to COMPUTE although a loadable entry existed
+    # (recomputing was cheaper than loading). These are deliberate
+    # economics, not missed reuse — fleet accounting (SweepReport)
+    # distinguishes them from coordination failures.
+    chose_compute: frozenset = frozenset()
 
     @property
     def n_computed(self) -> int:
@@ -117,7 +122,8 @@ class _Scheduler:
                  dedupe_inflight: bool = False,
                  dedupe_wait_seconds: float = 120.0,
                  share_sigs: frozenset | set | None = None,
-                 dedupe_skip: frozenset | set | None = None):
+                 dedupe_skip: frozenset | set | None = None,
+                 worker_pool=None):
         self.dag = dag
         self.sigs = sigs
         self.states = states
@@ -129,11 +135,19 @@ class _Scheduler:
         self.prefetch_depth = max(0, int(prefetch_depth))
         self.dedupe = bool(dedupe_inflight)
         self.dedupe_wait_seconds = float(dedupe_wait_seconds)
-        # Signatures known (by the sweep driver) to be wanted by sibling
-        # sessions: always persisted on lease-compute, so each is computed
-        # exactly once fleet-wide even when siblings race the waiter
-        # registration or arrive later.
-        self.share_sigs = frozenset(share_sigs or ())
+        # Signatures known (by the sweep driver / session server) to be
+        # wanted by sibling sessions: always persisted on lease-compute, so
+        # each is computed exactly once fleet-wide even when siblings race
+        # the waiter registration or arrive later. Any object supporting
+        # ``in`` works — the session server passes a live view over its
+        # cross-client multiplicity map so clients that arrive mid-run
+        # still count.
+        self.share_sigs = (share_sigs if share_sigs is not None
+                           else frozenset())
+        # Optional process-wide elastic worker pool (serve/pool.py): when
+        # set, extra workers beyond the caller's thread are borrowed from
+        # (and bounded by) the shared pool instead of spawned per-execute.
+        self.worker_pool = worker_pool
         # Nodes the planner chose to COMPUTE *despite* a loadable entry
         # (load costlier than recompute): the dedupe shortcut must not
         # override that judgment by loading anyway.
@@ -357,7 +371,7 @@ class _Scheduler:
             est_load = self.store.est_load_seconds(est_bytes)
             decision = self.materializer.decide(
                 self.dag, name, self.states, self.runtime,
-                est_load, est_bytes)
+                est_load, est_bytes, sig=self.sigs[name])
             if decision.materialize:
                 self.materialized[name] = decision.reason
                 sig = self.sigs[name]
@@ -436,6 +450,11 @@ class _Scheduler:
         n_workers = min(self.max_workers, max(self.n_total, 1))
         if n_workers <= 1:
             self._worker()
+        elif self.worker_pool is not None:
+            # Elastic: the calling thread always runs one worker (progress
+            # is guaranteed even with the pool exhausted); up to
+            # n_workers-1 extras are borrowed from the shared pool.
+            self.worker_pool.run(self._worker, n_workers)
         else:
             threads = [threading.Thread(target=self._worker,
                                         name=f"helix-exec-{i}", daemon=True)
@@ -472,13 +491,17 @@ def execute(dag: DAG,
             dedupe_inflight: bool = False,
             dedupe_wait_seconds: float = 120.0,
             share_sigs: frozenset | set | None = None,
-            dedupe_skip: frozenset | set | None = None) -> ExecutionReport:
+            dedupe_skip: frozenset | set | None = None,
+            worker_pool=None) -> ExecutionReport:
     """Execute a planned DAG. See the module docstring for the scheduler
     model; ``max_workers=1`` reproduces the sequential paper engine
     exactly. ``dedupe_inflight`` enables the fleet-wide compute-once
     protocol for COMPUTE nodes (shared-store concurrent sessions);
     ``share_sigs`` marks signatures known to recur across sibling
-    sessions (always persisted on lease-compute)."""
+    sessions (always persisted on lease-compute). ``worker_pool`` (a
+    ``repro.serve.SharedWorkerPool``) makes the worker count elastic:
+    extra workers are borrowed from one process-wide pool shared by all
+    sessions instead of spawned per call."""
     t_start = time.perf_counter()
     sched = _Scheduler(dag, sigs, states, store, materializer,
                        load_shardings, async_materialization,
@@ -486,7 +509,8 @@ def execute(dag: DAG,
                        dedupe_inflight=dedupe_inflight,
                        dedupe_wait_seconds=dedupe_wait_seconds,
                        share_sigs=share_sigs,
-                       dedupe_skip=dedupe_skip)
+                       dedupe_skip=dedupe_skip,
+                       worker_pool=worker_pool)
     sched.run()
     outputs = {n: sched.cache[n] for n in dag.outputs() if n in sched.cache}
     return ExecutionReport(
@@ -496,4 +520,5 @@ def execute(dag: DAG,
         total_seconds=time.perf_counter() - t_start, outputs=outputs,
         max_workers=sched.max_workers,
         peak_resident_loads=sched.peak_resident_loads,
-        deduped=sched.deduped)
+        deduped=sched.deduped,
+        chose_compute=frozenset(dedupe_skip or ()))

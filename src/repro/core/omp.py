@@ -15,23 +15,42 @@ We add the paper's storage budget S (skip materialization that would exceed
 it) and two baseline policies used in the paper's evaluation (§6.6):
 ALWAYS (≈ DeepDive) and NEVER (≈ KeystoneML).
 
-Beyond-paper option: ``horizon`` amortizes the payoff over an expected number
-of future reuse iterations (the paper explicitly defers this amortization
-model to future work): materialize iff (1 + 1/horizon)·l_i < C(n_i)/1 …
-i.e. with horizon→∞ the threshold approaches l_i < C(n_i).
+Beyond-paper option: amortization over expected reuse (the paper explicitly
+defers this model to future work). Two sources feed it:
+
+``horizon`` (static)
+    A session-wide prior: the expected number of *future loads* of any
+    materialized value. The threshold becomes (1 + 1/horizon)·l_i < C(n_i),
+    so horizon=1 is exactly the paper's 2·l_i < C(n_i) (materialize now,
+    load once later) and horizon→∞ approaches l_i < C(n_i). PR 2's sweep
+    driver set horizon≈K ("every sibling variant will probably load this"),
+    a *guess* made once for the whole sweep.
+
+``multiplicity`` (observed, per signature)
+    A callable ``sig -> expected future loads`` supplied by a driver with
+    global knowledge — the session server's live cross-client
+    signature-multiplicity map plus the cost model's historical reuse
+    counts. When provided, the effective horizon for a node is
+    ``max(horizon, multiplicity(sig))``: a signature three live clients are
+    waiting on is amortized over three loads *because they are really
+    there*, not because a static K said so. This supersedes the horizon≈K
+    heuristic; ``horizon`` remains the floor/prior for signatures nobody
+    else currently wants.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import threading
-from typing import Mapping
+from typing import Callable, Mapping
 
 from .dag import DAG, State
 from .locking import StorageLedger
 
 
 class Policy(enum.Enum):
+    """Materialization policy (§6.6): Algorithm 2 vs. the baselines."""
+
     OPT = "opt"        # Algorithm 2
     ALWAYS = "always"  # Helix AM
     NEVER = "never"    # Helix NM
@@ -39,6 +58,8 @@ class Policy(enum.Enum):
 
 @dataclasses.dataclass
 class MatDecision:
+    """One node's materialization verdict plus a human-readable reason."""
+
     materialize: bool
     reason: str
 
@@ -73,21 +94,38 @@ class Materializer:
     policy: Policy = Policy.OPT
     storage_budget_bytes: float = float("inf")
     used_bytes: float = 0.0
-    horizon: float = 1.0  # expected future iterations a node stays reusable
+    horizon: float = 1.0  # static prior: expected future loads (paper: 1)
     ledger: StorageLedger | None = None
     # Sweeps with pinned signature nonces make nondeterministic operators
     # equivalent across sibling variants — then they *are* reusable and
     # Algorithm 2's nondeterminism veto must be lifted.
     nondet_reusable: bool = False
+    # Observed per-signature reuse (module docstring): maps a signature to
+    # the expected number of future loads; the effective horizon for that
+    # node is max(horizon, multiplicity(sig)). Installed by drivers with
+    # global knowledge (the session server); None keeps the static prior.
+    multiplicity: Callable[[str], float] | None = None
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
+
+    def effective_horizon(self, sig: str | None) -> float:
+        """Amortization count for one node: the static ``horizon`` prior,
+        lifted by the observed ``multiplicity`` of its signature."""
+        h = self.horizon
+        if self.multiplicity is not None and sig is not None:
+            h = max(h, float(self.multiplicity(sig)))
+        return max(h, 1e-9)
 
     def decide(self, dag: DAG, name: str,
                states: Mapping[str, State],
                runtime: Mapping[str, float],
                est_load_seconds: float,
-               est_bytes: float) -> MatDecision:
+               est_bytes: float,
+               sig: str | None = None) -> MatDecision:
+        """Decide whether to materialize ``name`` as it goes out of scope
+        (Algorithm 2 under the configured policy, budget, and — when
+        ``sig`` is given — the observed-multiplicity amortization)."""
         node = dag.nodes[name]
         if node.is_output:
             # Mandatory outputs are always persisted (HML ``is_output``).
@@ -101,9 +139,10 @@ class Materializer:
             return self._budgeted(est_bytes, "policy AM")
         if not node.deterministic and not self.nondet_reusable:
             return MatDecision(False, "nondeterministic: never reusable")
-        # Algorithm 2 with amortization horizon (horizon=1 == paper).
+        # Algorithm 2 with amortization (horizon=1, no multiplicity == paper).
         c_cum = cumulative_runtime(dag, name, states, runtime)
-        threshold = (1.0 + 1.0 / max(self.horizon, 1e-9)) * est_load_seconds
+        threshold = (1.0 + 1.0 / self.effective_horizon(sig)) \
+            * est_load_seconds
         if threshold < c_cum:
             return self._budgeted(
                 est_bytes, f"2·l={threshold:.3g} < C={c_cum:.3g}")

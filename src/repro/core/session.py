@@ -32,6 +32,10 @@ from .workflow import Workflow
 
 @dataclasses.dataclass
 class IterationReport:
+    """Everything one :meth:`IterativeSession.run` produced: the execution
+    report, the signature map, the original/sliced sets, and store
+    accounting."""
+
     execution: ExecutionReport
     sigs: dict[str, str]
     original: set[str]
@@ -41,14 +45,18 @@ class IterationReport:
 
     @property
     def outputs(self) -> dict[str, Any]:
+        """Values of the workflow's mandatory output nodes."""
         return self.execution.outputs
 
     @property
     def total_seconds(self) -> float:
+        """Wall clock of the execution phase."""
         return self.execution.total_seconds
 
     @property
     def deduped(self) -> dict[str, str]:
+        """COMPUTE-planned nodes another session's compute turned into
+        loads (in-flight dedupe)."""
         return self.execution.deduped
 
 
@@ -72,7 +80,7 @@ class IterativeSession:
         queue instead of blocking the executing worker; write wall time is
         still accounted in ``ExecutionReport.mat_seconds``.
 
-    Fleet knobs (many sessions, one workdir — see sweep.py):
+    Fleet knobs (many sessions, one workdir — see sweep.py and serve/):
 
     ``dedupe_inflight``
         Compute-once protocol: COMPUTE nodes take the store's fleet-wide
@@ -92,6 +100,23 @@ class IterativeSession:
         variants legitimately hold same-name/different-signature entries
         that are not stale. (Deletes always respect other sessions' live
         leases regardless.)
+
+    Server knobs (one long-running process hosting many sessions — see
+    ``repro.serve``):
+
+    ``store`` / ``cost_model``
+        Injected shared instances. The session server opens one
+        :class:`Store` (one writer queue, one heal pass, one bandwidth
+        EWMA) and one :class:`CostModel` per workdir and hands them to
+        every session it hosts; standalone sessions construct their own.
+    ``worker_pool``
+        A ``repro.serve.SharedWorkerPool``: executor workers beyond the
+        session's own thread are borrowed from one process-wide pool
+        instead of each session pooling independently.
+    ``multiplicity``
+        ``sig -> expected future loads`` fed to OMP's amortized
+        materialization threshold (the server's live cross-client
+        signature-multiplicity map; see omp.py).
     """
 
     def __init__(self, workdir: str,
@@ -105,11 +130,17 @@ class IterativeSession:
                  dedupe_wait_seconds: float = 600.0,
                  shared_budget: bool = False,
                  purge_stale: bool = True,
-                 nondet_reusable: bool = False):
+                 nondet_reusable: bool = False,
+                 store: Store | None = None,
+                 cost_model: CostModel | None = None,
+                 worker_pool=None,
+                 multiplicity: Callable[[str], float] | None = None):
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
-        self.store = Store(os.path.join(workdir, "store"))
-        self.cost_model = CostModel(os.path.join(workdir, "costs.json"))
+        self.store = store if store is not None \
+            else Store(os.path.join(workdir, "store"))
+        self.cost_model = cost_model if cost_model is not None \
+            else CostModel(os.path.join(workdir, "costs.json"))
         ledger = None
         if shared_budget:
             ledger = StorageLedger(self.store.ledger_path)
@@ -117,7 +148,8 @@ class IterativeSession:
         self.materializer = Materializer(
             policy=policy, storage_budget_bytes=storage_budget_bytes,
             horizon=horizon, ledger=ledger,
-            nondet_reusable=nondet_reusable)
+            nondet_reusable=nondet_reusable,
+            multiplicity=multiplicity)
         if ledger is None:
             self.materializer.used_bytes = float(self.store.total_bytes())
         self.async_materialization = async_materialization
@@ -126,6 +158,7 @@ class IterativeSession:
         self.dedupe_inflight = dedupe_inflight
         self.dedupe_wait_seconds = dedupe_wait_seconds
         self.purge_stale = purge_stale
+        self.worker_pool = worker_pool
         self.iteration = 0
 
     # ------------------------------------------------------------------------------
@@ -146,9 +179,21 @@ class IterativeSession:
         keep = slice_from_outputs(dag)
         sliced = dag.subgraph(keep)
 
+        # One store stat per node per planning pass (shared NFS-style
+        # workdirs make metadata I/O expensive; the two uses below must
+        # also agree on one snapshot).
+        in_store = {n: self.store.has(sigs[n]) for n in sliced.topological()}
+
         # §4.2 change tracking: original ⇔ signature never seen before.
+        # The store is consulted too: an equivalent materialization on disk
+        # (Def. 3) proves some session computed this signature even if the
+        # shared cost statistics have not flushed yet — without this, a
+        # session dispatched the moment a sibling's shared prefix lands
+        # (the server's prefix-first schedule does exactly that) would
+        # force-COMPUTE a value it could load.
         original = {n for n in sliced.topological()
-                    if self.cost_model.is_original(sigs[n])}
+                    if self.cost_model.is_original(sigs[n])
+                    and not in_store[n]}
 
         # §5.1 operator metrics.
         compute_cost: dict[str, float] = {}
@@ -157,7 +202,7 @@ class IterativeSession:
             node = sliced.nodes[n]
             compute_cost[n] = self.cost_model.compute_cost(
                 sigs[n], hint=node.cost_hint)
-            if self.store.has(sigs[n]):
+            if in_store[n]:
                 meta = self.store.meta(sigs[n])
                 load_cost[n] = self.store.est_load_seconds(meta["nbytes"])
             else:
@@ -206,6 +251,7 @@ class IterativeSession:
                 dedupe_inflight=self.dedupe_inflight,
                 dedupe_wait_seconds=self.dedupe_wait_seconds,
                 share_sigs=share_sigs,
+                worker_pool=self.worker_pool,
                 # Planner chose COMPUTE although a load existed — loading
                 # is costlier there; the dedupe shortcut must not undo it.
                 dedupe_skip={n for n, s in states.items()
@@ -216,12 +262,14 @@ class IterativeSession:
                 lease.release()
 
         # Record statistics for future iterations. Nodes the in-flight
-        # dedupe turned into loads did not yield a compute measurement.
+        # dedupe turned into loads did not yield a compute measurement;
+        # loads (planned or deduped) count as reuse events, which feed
+        # OMP's amortization (see costs.py / omp.py multiplicity).
         for n, secs in report.runtime.items():
             if states[n] is State.COMPUTE and n not in report.deduped:
                 self.cost_model.record(sigs[n], compute_seconds=secs)
             else:
-                self.cost_model.record(sigs[n])
+                self.cost_model.record(sigs[n], reused=True)
         self.cost_model.save()
         self.iteration += 1
 

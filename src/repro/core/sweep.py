@@ -1,28 +1,35 @@
-"""Shared-store concurrent sweep engine: many sessions, one cache.
+"""Hyperparameter sweeps as session-server submissions.
 
 Helix (the paper) optimizes *one* developer's iteration loop. This driver
 turns the same machinery into fleet-scale reuse, following "Exploiting
 Reuse in Pipeline-Aware Hyperparameter Tuning" (Li et al., 2019) and
 "Accelerating Human-in-the-loop Machine Learning" (Xin et al., 2018): run
-N workflow *variants* (a knob grid or random search) concurrently against
-one shared materialization store. Variants that share a DAG prefix share
-its signatures, so:
+K workflow *variants* (a knob grid or random search) concurrently against
+one shared materialization store.
 
-* the first variant to need a shared signature computes it under the
-  store's **compute lease** and force-persists it for the registered
-  waiters — each shared signature is computed exactly once fleet-wide;
-* every other variant either waits-and-loads (in-flight dedupe) or, if it
-  plans after the value landed, gets a plain OEP LOAD from the max-flow
-  planner;
-* the storage budget is enforced through the store's **shared ledger**,
-  and the §6.6 stale-purge is disabled (sibling variants' same-name
-  entries are not stale — and deletes respect live leases regardless).
+Since PR 3 a sweep is literally K submissions to an in-process
+:class:`~repro.serve.server.SessionServer` (submitted as one held batch so
+the global scheduler sees all multiplicities up front). The server brings:
 
-Nondeterministic operators normally draw a fresh signature nonce per
-compilation and can never be shared. ``share_nondet=True`` (default) pins
-one nonce map for the whole sweep — morally "fix the seed for this sweep":
-identical unseeded operators across variants become equivalent and are
-computed once. Disable it for strictly independent per-variant randomness.
+* **shared-prefix-first scheduling** — variants that would newly compute a
+  widely shared prefix dispatch first; siblings of an in-flight shared
+  computation yield their slot to independent arms (they would mostly
+  block on its compute lease), lease-following the leader only when
+  nothing independent remains. ``schedule="fifo"`` restores PR 2's
+  lease-contention-only ordering.
+* **observed amortization** — the live signature-multiplicity map feeds
+  OMP (see omp.py ``multiplicity``), superseding PR 2's static horizon≈K
+  guess. ``horizon`` remains available as an explicit floor.
+* **one elastic worker pool** — all K sessions draw executor workers from
+  one process-wide pool instead of pooling independently.
+
+The PR 2 correctness properties are unchanged (they live in the store's
+lease protocol, not the scheduler): each shared signature is computed at
+most once fleet-wide, the storage budget is enforced through the shared
+ledger, the §6.6 stale-purge is disabled (sibling variants' same-name
+entries are not stale), and with ``share_nondet=True`` (default) one
+pinned nonce map makes identical unseeded operators sweep-equivalent —
+morally "fix the seed for this sweep".
 
 Concurrency is thread-based (JAX is fork-hostile); the store machinery
 underneath is ``flock``-based, so independent OS processes pointed at the
@@ -33,18 +40,11 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import os
-import threading
 import time
-import uuid
-from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Mapping, Sequence
 
-from .locking import StorageLedger
 from .omp import Policy
-from .session import IterationReport, IterativeSession
-from .signature import compute_signatures
-from .store import Store
+from .session import IterationReport
 from .workflow import Workflow
 
 
@@ -90,24 +90,11 @@ def random_search(base: Any, mutate: Callable[[Any, Any], Any], n: int,
     return out
 
 
-class _SharedNonces:
-    """Sweep-wide nonce map for nondeterministic nodes: first access per
-    node name draws the nonce, every variant then reuses it (signatures
-    still differ across variants whose node *versions* differ)."""
-
-    def __init__(self) -> None:
-        self._nonces: dict[str, str] = {}
-        self._lock = threading.Lock()
-
-    def get(self, name: str, default: str | None = None) -> str:
-        with self._lock:
-            if name not in self._nonces:
-                self._nonces[name] = uuid.uuid4().hex
-            return self._nonces[name]
-
-
 @dataclasses.dataclass
 class VariantResult:
+    """One arm's outcome: its report (or the error that stopped it) and
+    its run seconds (queue wait excluded)."""
+
     variant: SweepVariant
     report: IterationReport | None
     seconds: float
@@ -115,23 +102,30 @@ class VariantResult:
 
     @property
     def outputs(self) -> dict[str, Any]:
+        """The arm's workflow outputs ({} when it errored)."""
         return {} if self.report is None else self.report.outputs
 
 
 @dataclasses.dataclass
 class SweepReport:
+    """Fleet-level outcome of :func:`run_sweep` over all variants."""
+
     results: list[VariantResult]
     wall_seconds: float
     store_bytes: int
 
     @property
     def outputs(self) -> dict[str, dict[str, Any]]:
+        """Outputs keyed by variant name."""
         return {r.variant.name: r.outputs for r in self.results}
 
     def fleet_computes(self) -> dict[str, int]:
         """How many variants actually *computed* each signature (planned
         COMPUTE and not turned into a load by the in-flight dedupe).
-        With dedupe on, shared signatures must all be 1."""
+
+        A count > 1 is either a deliberate planner choice (the value was
+        loadable but recomputing was cheaper — see
+        :meth:`wasted_recomputes`) or a coordination failure."""
         from .dag import State
         counts: dict[str, int] = {}
         for r in self.results:
@@ -144,7 +138,36 @@ class SweepReport:
                     counts[sig] = counts.get(sig, 0) + 1
         return counts
 
+    def wasted_recomputes(self) -> int:
+        """Shared signatures computed more than once where reuse was
+        actually on the table — true coordination failures.
+
+        A duplicate compute is *not* wasted when the later variant's
+        max-flow planner saw the loadable entry and still chose COMPUTE
+        because loading was costlier (``ExecutionReport.chose_compute``) —
+        that is reuse economics working, e.g. a sub-millisecond extractor
+        is cheaper to rerun than to read back. The acceptance bar for the
+        fleet engines is that this method returns 0: no variant ever
+        recomputes a shared value because coordination lost it."""
+        from .dag import State
+        # Per signature: computes that were NOT a deliberate
+        # cheaper-to-recompute choice. One such compute per signature is
+        # the unavoidable cold start; a second one means two sessions
+        # each believed nobody had the value — a coordination failure.
+        blind: dict[str, int] = {}
+        for r in self.results:
+            if r.report is None:
+                continue
+            ex = r.report.execution
+            for n, s in ex.states.items():
+                if (s is State.COMPUTE and n not in ex.deduped
+                        and n not in ex.chose_compute):
+                    sig = r.report.sigs[n]
+                    blind[sig] = blind.get(sig, 0) + 1
+        return sum(1 for c in blind.values() if c > 1)
+
     def raise_errors(self) -> None:
+        """Re-raise the first variant error, if any arm failed."""
         for r in self.results:
             if r.error is not None:
                 raise r.error
@@ -162,89 +185,81 @@ def run_sweep(workdir: str,
               share_nondet: bool = True,
               dedupe_inflight: bool = True,
               dedupe_wait_seconds: float = 3600.0,
-              horizon: float | None = None) -> SweepReport:
+              horizon: float | None = None,
+              schedule: str = "prefix",
+              pool_workers: int | None = None) -> SweepReport:
     """Run every variant against one shared store in ``workdir``.
 
-    Each variant gets its own :class:`IterativeSession` over the *same*
-    workdir (shared store, shared cost statistics, shared budget ledger),
-    with in-flight dedupe on and stale-purging off. ``n_concurrent`` bounds
-    how many variants run at once (default: all); ``max_workers`` /
-    ``prefetch_depth`` / ``async_materialization`` are forwarded to each
-    session's pipelined executor.
+    Spins up an in-process :class:`~repro.serve.server.SessionServer`
+    over ``workdir``, submits the K variants as one held batch (so the
+    global scheduler sees every shared signature's multiplicity before
+    ordering), waits for all of them, and shuts the server down. Each
+    variant runs in its own session over the same store / cost statistics
+    / budget ledger, with in-flight dedupe on and stale-purging off.
 
-    ``horizon`` defaults to the number of variants: a materialized shared
-    value is expected to be reused by roughly every sibling, which is
-    exactly the amortization OMP's threshold wants (see omp.py).
-    ``dedupe_wait_seconds`` (default 1 h) must exceed the longest shared
-    node's compute time, or waiters time out and duplicate it — it is
-    only the escape hatch that keeps a crashed-but-lease-holding-via-NFS
-    style pathology from stalling the sweep forever.
+    ``n_concurrent`` bounds how many variants run at once (default: all);
+    ``max_workers`` / ``prefetch_depth`` / ``async_materialization`` are
+    forwarded to each session's pipelined executor, whose workers come
+    from one shared pool of ``pool_workers`` (default: enough for every
+    concurrent session).
+
+    ``schedule`` picks the dispatch policy: ``"prefix"`` (default) is the
+    server's shared-prefix-first order with sibling deferral;  ``"fifo"``
+    reproduces PR 2's arrival-order dispatch where siblings coordinate
+    through lease contention alone.
+
+    ``horizon`` is now only an explicit static floor for OMP's
+    amortization: by default the server's live signature-multiplicity map
+    tells OMP *exactly* how many siblings want each value (superseding
+    the old horizon≈K guess). ``dedupe_wait_seconds`` (default 1 h) must
+    exceed the longest shared node's compute time, or waiters time out
+    and duplicate it — it is only the escape hatch that keeps a
+    crashed-but-lease-holding-via-NFS style pathology from stalling the
+    sweep forever.
     """
+    from ..serve.server import SessionServer  # local: avoids import cycle
+
     variants = list(variants)
     if not variants:
         return SweepReport(results=[], wall_seconds=0.0, store_bytes=0)
     n_concurrent = len(variants) if n_concurrent is None \
         else max(1, int(n_concurrent))
-    nonces = _SharedNonces() if share_nondet else None
-    hz = float(len(variants)) if horizon is None else horizon
+    if schedule == "fifo" and horizon is None:
+        # The fifo baseline must be PR 2 end-to-end: no observed
+        # multiplicity (the server already withholds it in fifo mode),
+        # and PR 2's static horizon≈K amortization default.
+        horizon = float(len(variants))
 
-    # Pre-pass: compile every variant's DAG once (cheap — node declaration
-    # only) to learn which signatures recur across variants. Those are the
-    # shared prefixes; the executor force-persists them on lease-compute so
-    # each is computed exactly once fleet-wide even without a waiter racing
-    # the holder. Signatures are stable across the re-compilation inside
-    # each session because the nonce map is pinned.
-    sig_count: dict[str, int] = {}
-    for v in variants:
-        for sig in set(compute_signatures(v.build().build(),
-                                          nonces=nonces).values()):
-            sig_count[sig] = sig_count.get(sig, 0) + 1
-    share_sigs = frozenset(s for s, c in sig_count.items() if c >= 2)
-
-    # Open (and heal) the store once before the fleet does, and reconcile
-    # the shared budget ledger with what is actually on disk — sessions
-    # without a ledger (or crashes between reserve and save) let the
-    # on-disk used-bytes drift upward, which would otherwise starve every
-    # future sweep's materializations. No sibling of THIS sweep has
-    # started yet; a held lease means some OTHER process's fleet is
-    # mid-run on this workdir, and its live reservations must not be
-    # erased — skip the reconcile then (drift heals on the next quiet
-    # open instead).
-    store = Store(os.path.join(workdir, "store"))
-    if not store.any_live_lease():
-        StorageLedger(store.ledger_path).reset(float(store.total_bytes()))
-
-    def run_one(variant: SweepVariant) -> VariantResult:
-        t0 = time.perf_counter()
-        try:
-            sess = IterativeSession(
-                workdir, policy=policy,
-                storage_budget_bytes=storage_budget_bytes,
-                async_materialization=async_materialization,
-                horizon=hz, max_workers=max_workers,
-                prefetch_depth=prefetch_depth,
-                dedupe_inflight=dedupe_inflight,
-                dedupe_wait_seconds=dedupe_wait_seconds,
-                shared_budget=True, purge_stale=False,
-                nondet_reusable=share_nondet)
-            report = sess.run(variant.build(), nonces=nonces,
-                              share_sigs=share_sigs)
-            return VariantResult(variant=variant, report=report,
-                                 seconds=time.perf_counter() - t0)
-        except BaseException as e:
-            return VariantResult(variant=variant, report=None,
-                                 seconds=time.perf_counter() - t0, error=e)
-
+    server = SessionServer(
+        workdir, n_sessions=n_concurrent, pool_workers=pool_workers,
+        schedule=schedule, policy=policy,
+        storage_budget_bytes=storage_budget_bytes,
+        max_workers=max_workers, prefetch_depth=prefetch_depth,
+        async_materialization=async_materialization,
+        share_nondet=share_nondet, dedupe_inflight=dedupe_inflight,
+        dedupe_wait_seconds=dedupe_wait_seconds, horizon=horizon)
     t_start = time.perf_counter()
-    if n_concurrent == 1:
-        results = [run_one(v) for v in variants]
-    else:
-        with ThreadPoolExecutor(
-                max_workers=n_concurrent,
-                thread_name_prefix="helix-sweep") as pool:
-            results = list(pool.map(run_one, variants))
+    jobs: list = []
+    try:
+        # One held batch: every variant's signatures enter the multiplicity
+        # map before the first dispatch decision is made.
+        with server.hold_dispatch():
+            for v in variants:
+                try:
+                    jobs.append(server.submit(v.build, name=v.name))
+                except BaseException as e:  # a broken factory is one arm's
+                    jobs.append(e)          # failure, not the sweep's
+        server.wait_all([j for j in jobs if not isinstance(j, BaseException)])
+    finally:
+        server.shutdown()
     wall = time.perf_counter() - t_start
 
+    results = [
+        VariantResult(variant=v, report=None, seconds=0.0, error=j)
+        if isinstance(j, BaseException) else
+        VariantResult(variant=v, report=j.report,
+                      seconds=j.run_seconds, error=j.error)
+        for v, j in zip(variants, jobs)]
     store_bytes = 0
     for r in results:
         if r.report is not None:

@@ -1,0 +1,156 @@
+"""Clients for the session server: socket-based and in-process.
+
+:class:`ServerClient` speaks the length-prefixed JSON protocol over a unix
+or TCP socket (see protocol.py); :class:`InProcessClient` drives a
+:class:`~repro.serve.server.SessionServer` in the same process through the
+identical message handler, so tests exercise the real protocol semantics
+without a socket. Both expose the same methods and return the same
+JSON-shaped dicts.
+
+Quickstart::
+
+    from repro.serve import SessionServer, connect_unix
+
+    server = SessionServer("/data/helix", registry={"census": build})
+    path = server.serve_unix("/tmp/helix.sock")
+
+    client = connect_unix(path)
+    job = client.submit("census", {"reg": 0.3})
+    print(client.wait(job)["outputs"])
+    client.close()
+"""
+from __future__ import annotations
+
+import socket
+from typing import Any, Mapping
+
+from .protocol import recv_msg, send_msg
+from .server import SessionServer
+
+
+class ServerError(RuntimeError):
+    """The server answered ``ok: false``; the message is its ``error``."""
+
+
+class _ClientBase:
+    """Shared convenience methods over the raw ``op`` messages."""
+
+    def _rpc(self, **msg: Any) -> dict:
+        raise NotImplementedError
+
+    def hello(self) -> dict:
+        """Server identity, schedule mode, and registered workflows."""
+        return self._rpc(op="hello")
+
+    def submit(self, workflow: str, params: Mapping[str, Any]
+               | None = None, name: str | None = None) -> str:
+        """Submit a registered workflow by name; returns the job id."""
+        resp = self._rpc(op="submit", workflow=workflow,
+                         params=dict(params or {}), name=name)
+        return resp["job"]
+
+    def wait(self, job: str, timeout: float | None = None) -> dict:
+        """Block until ``job`` finishes; returns its summary dict."""
+        return self._rpc(op="wait", job=job, timeout=timeout)
+
+    def job(self, job: str) -> dict:
+        """Non-blocking job summary."""
+        return self._rpc(op="job", job=job)
+
+    def forget(self, job: str) -> bool:
+        """Release a finished job's server-side record (frees its
+        outputs); False when unknown or still running."""
+        return bool(self._rpc(op="forget", job=job)["forgotten"])
+
+    def status(self) -> dict:
+        """Server status snapshot (queue depth, slots, pool, store)."""
+        return self._rpc(op="status")
+
+    def multiplicity(self, sig: str) -> int:
+        """Live cross-client multiplicity of one signature."""
+        return int(self._rpc(op="multiplicity", sig=sig)["multiplicity"])
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Ask the server to stop accepting and finish live work."""
+        return bool(self._rpc(op="drain", timeout=timeout)["drained"])
+
+    def shutdown(self) -> dict:
+        """Request server shutdown (graceful: submitted work finishes)."""
+        return self._rpc(op="shutdown")
+
+
+class ServerClient(_ClientBase):
+    """Synchronous socket client: one request/response per call.
+
+    One instance wraps one connection and is not thread-safe; concurrent
+    clients each open their own (``submit`` returns immediately, so a
+    single client can still keep many jobs in flight and ``wait`` on them
+    in turn).
+    """
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+
+    def _rpc(self, **msg: Any) -> dict:
+        send_msg(self._sock, msg)
+        resp = recv_msg(self._sock)
+        if resp is None:
+            raise ConnectionError("server closed the connection")
+        if not resp.get("ok"):
+            raise ServerError(resp.get("error", "unknown server error"))
+        return resp
+
+    def close(self) -> None:
+        """Close the connection (idempotent)."""
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "ServerClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class InProcessClient(_ClientBase):
+    """Protocol-faithful client for a server in the same process.
+
+    Routes every call through ``SessionServer._handle`` — the same code
+    path socket connections hit — so responses are byte-for-byte what the
+    wire would carry, minus the framing. ``shutdown`` additionally joins
+    the server (sockets get that for free from the connection handler).
+    """
+
+    def __init__(self, server: SessionServer):
+        self._server = server
+
+    def _rpc(self, **msg: Any) -> dict:
+        resp = self._server._handle(msg)
+        if not resp.get("ok"):
+            raise ServerError(resp.get("error", "unknown server error"))
+        return resp
+
+    def shutdown(self) -> dict:
+        """Request shutdown and join the server before returning."""
+        resp = super().shutdown()
+        self._server.shutdown()
+        return resp
+
+    def close(self) -> None:
+        """No-op (kept for interface parity with ServerClient)."""
+
+
+def connect_unix(path: str) -> ServerClient:
+    """Connect to a session server's unix domain socket."""
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(path)
+    return ServerClient(sock)
+
+
+def connect_tcp(host: str, port: int) -> ServerClient:
+    """Connect to a session server's TCP endpoint."""
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.connect((host, port))
+    return ServerClient(sock)

@@ -1,0 +1,123 @@
+"""Wire protocol of the session server: length-prefixed JSON frames.
+
+Transport-agnostic (the same frames flow over a unix socket or TCP): each
+frame is a 4-byte big-endian payload length followed by that many bytes of
+UTF-8 JSON. One request frame yields exactly one response frame on the
+same connection; connections are sequential (a client that wants parallel
+submissions opens several connections or submits first and waits later —
+``submit`` returns immediately with a job id).
+
+Request messages (``op`` selects the operation)::
+
+    {"op": "hello"}
+    {"op": "submit", "workflow": <registry name>, "params": {...},
+     "name": <optional job label>}
+    {"op": "job",    "job": <job id>}                  # non-blocking status
+    {"op": "wait",   "job": <job id>, "timeout": <s>}  # blocks until done
+    {"op": "forget", "job": <job id>}                  # drop a finished job
+    {"op": "status"}
+    {"op": "multiplicity", "sig": <signature>}
+    {"op": "drain",  "timeout": <optional s>}
+    {"op": "shutdown"}
+
+Responses always carry ``ok`` (bool); failures carry ``error`` (str).
+``submit`` responds ``{"ok": true, "job": id}``; ``wait``/``job`` respond
+with a job summary (status, timings, execution counts, JSON-coerced
+outputs — see :func:`jsonable`). A ``wait`` that times out responds
+``ok: false`` with a ``TimeoutError:`` message. The server retains the
+last ``max_finished_jobs`` summaries; ``forget`` releases one eagerly.
+
+Workflows cross the wire *by registry name*: the server is constructed
+with ``registry={name: factory}`` and the client submits ``(name,
+params)``; the factory runs server-side. Arbitrary callables never cross
+the boundary. In-process callers (tests, ``run_sweep``) can submit real
+:class:`~repro.core.workflow.Workflow` objects through
+``SessionServer.submit`` directly.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import Any
+
+# A frame larger than this is a protocol error, not a big result: outputs
+# are summarized by jsonable() before they are framed.
+MAX_FRAME_BYTES = 64 * 1024 * 1024
+
+# Array leaves up to this many elements are inlined into result summaries;
+# larger ones are reported as shape/dtype stubs.
+_INLINE_ARRAY_ELEMS = 64
+
+
+class ProtocolError(RuntimeError):
+    """A malformed or oversized frame was received."""
+
+
+def send_msg(sock: socket.socket, obj: Any) -> None:
+    """Serialize ``obj`` to JSON and write one length-prefixed frame."""
+    data = json.dumps(obj).encode("utf-8")
+    if len(data) > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame too large: {len(data)} bytes")
+    sock.sendall(struct.pack(">I", len(data)) + data)
+
+
+def recv_msg(sock: socket.socket) -> Any | None:
+    """Read one frame; returns the decoded object, or None on clean EOF."""
+    header = _recv_exact(sock, 4)
+    if header is None:
+        return None
+    (length,) = struct.unpack(">I", header)
+    if length > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame too large: {length} bytes")
+    data = _recv_exact(sock, length)
+    if data is None:
+        raise ProtocolError("connection closed mid-frame")
+    return json.loads(data.decode("utf-8"))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    """Read exactly ``n`` bytes. None on clean EOF at a frame boundary;
+    :class:`ProtocolError` if the peer vanishes mid-frame."""
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if not buf:
+                return None
+            raise ProtocolError("connection closed mid-frame")
+        buf += chunk
+    return buf
+
+
+def jsonable(value: Any) -> Any:
+    """Best-effort JSON coercion of a workflow output for the wire.
+
+    Scalars pass through; numpy scalars become Python numbers; small
+    arrays are inlined as nested lists; large arrays (and anything else
+    unserializable) become descriptive stubs. The authoritative values
+    stay server-side in the store — the wire carries a *summary*.
+    """
+    import numpy as np
+
+    if value is None or isinstance(value, (bool, int, float, str)):
+        return value
+    if isinstance(value, (np.integer,)):
+        return int(value)
+    if isinstance(value, (np.floating,)):
+        return float(value)
+    if isinstance(value, dict):
+        return {str(k): jsonable(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [jsonable(v) for v in value]
+    if isinstance(value, np.ndarray):
+        if value.size <= _INLINE_ARRAY_ELEMS:
+            return {"__ndarray__": True, "shape": list(value.shape),
+                    "dtype": str(value.dtype), "data": value.tolist()}
+        return {"__ndarray__": True, "shape": list(value.shape),
+                "dtype": str(value.dtype), "data": None}
+    try:  # jax arrays and other array-likes
+        arr = np.asarray(value)
+        return jsonable(arr)
+    except Exception:
+        return {"__repr__": repr(value)[:256]}

@@ -1,0 +1,164 @@
+"""Globally shared-prefix-aware scheduling (Li et al. 2019 applied fleet-
+wide).
+
+PR 2's sweep relied on *lease contention* for cross-session coordination:
+all K variants start at once, and siblings that need an in-flight shared
+signature block on its compute lease — correct (each shared signature is
+computed exactly once) but wasteful, because a blocked sibling occupies a
+session slot doing nothing. The session server knows every live
+submission's signature set, so it can do better than contention:
+
+* **Multiplicity map** — for every signature, how many live (queued or
+  running) submissions need it. This is the observed analogue of the
+  sweep pre-pass's shared-signature set, maintained incrementally as
+  clients come and go, and it doubles as OMP's amortization input
+  (``Materializer.multiplicity``).
+* **Shared-prefix-first order** — among dispatchable submissions, run the
+  one whose *not-yet-materialized* signatures carry the largest shared
+  weight (multiplicity − 1, scaled by the cost model's estimated compute
+  seconds). Expensive widely-shared prefixes start as early as possible,
+  so they are already hot when sibling workflows reach the front.
+* **Sibling deferral** — a submission whose needed signatures are being
+  computed by a running submission is outranked by *independent* queued
+  work: the independent job gets the slot (it makes full-speed progress
+  where the sibling would intermittently block on compute leases).
+  Deferral reorders but never idles: when only blocked submissions are
+  queued, the one with the *smallest cost-weighted overlap* with
+  in-flight work is dispatched anyway — it lease-follows the leader the
+  shortest time before diverging into independent compute (prefer a
+  different model family over the running arm's twin), which is strictly
+  better than an empty slot. The lease protocol underneath remains the
+  correctness backstop; the scheduler only spends slots where they buy
+  wall-clock.
+
+The scheduler is pure policy: it owns no locks and mutates nothing but
+its multiplicity map. The server drives it under the server lock.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Protocol, Sequence
+
+
+class _SchedJob(Protocol):
+    """What the scheduler needs to know about a submission."""
+
+    seq: int                    # arrival order (FIFO tiebreak)
+    sigs: frozenset             # the submission's full signature set
+
+
+class PrefixScheduler:
+    """Shared-prefix-first dispatch order over live submissions."""
+
+    def __init__(self, store, cost_model, mode: str = "prefix"):
+        if mode not in ("prefix", "fifo"):
+            raise ValueError(f"unknown schedule mode: {mode!r}")
+        self.store = store
+        self.cost_model = cost_model
+        self.mode = mode
+        self._mult: dict[str, int] = {}
+
+    # -- multiplicity map --------------------------------------------------
+    def add(self, job: _SchedJob) -> None:
+        """Track a newly submitted job's signatures."""
+        for sig in job.sigs:
+            self._mult[sig] = self._mult.get(sig, 0) + 1
+
+    def remove(self, job: _SchedJob) -> None:
+        """Drop a finished job's signatures from the live map."""
+        for sig in job.sigs:
+            cur = self._mult.get(sig, 0) - 1
+            if cur <= 0:
+                self._mult.pop(sig, None)
+            else:
+                self._mult[sig] = cur
+
+    def multiplicity(self, sig: str) -> int:
+        """Live submissions (queued or running) that need ``sig``."""
+        return self._mult.get(sig, 0)
+
+    # -- dispatch policy ---------------------------------------------------
+    def shared_weight(self, job: _SchedJob, has=None) -> float:
+        """Cost-weighted shared work this job would *newly* compute.
+
+        Sums ``(multiplicity - 1) · est_compute_seconds`` over the job's
+        signatures that are shared with other live submissions and not in
+        the store yet. Jobs whose shared prefix is already materialized
+        score 0 (they are cheap loads and can run any time). ``has``
+        optionally overrides ``store.has`` (pick() passes a memo so one
+        dispatch decision stats each signature at most once).
+        """
+        has = has or self.store.has
+        total = 0.0
+        for sig in job.sigs:
+            m = self._mult.get(sig, 0)
+            if m >= 2 and not has(sig):
+                total += (m - 1) * self.cost_model.compute_cost(sig)
+        return total
+
+    def blocked(self, job: _SchedJob, inflight: Iterable[str],
+                has=None) -> bool:
+        """Would dispatching ``job`` now just block on a compute lease?
+
+        True iff a signature the job needs is assigned to a running
+        submission and has not been materialized yet.
+        """
+        has = has or self.store.has
+        for sig in inflight:
+            if sig in job.sigs and not has(sig):
+                return True
+        return False
+
+    def overlap_weight(self, job: _SchedJob, inflight: set,
+                       has=None) -> float:
+        """Cost-weighted overlap between ``job`` and in-flight work.
+
+        Estimated compute seconds of the job's signatures a running
+        submission is (presumably) about to produce. Among blocked jobs
+        the scheduler dispatches the one with the *smallest* overlap: it
+        spends the least time lease-following before diverging into
+        independent compute — e.g. prefer the arm from a different model
+        family over the running arm's twin.
+        """
+        has = has or self.store.has
+        return sum(self.cost_model.compute_cost(sig)
+                   for sig in job.sigs
+                   if sig in inflight and not has(sig))
+
+    def pick(self, queued: Sequence[_SchedJob],
+             inflight: Iterable[str]) -> _SchedJob | None:
+        """Choose the next submission to dispatch (None iff queue empty).
+
+        ``queued`` is the live queue in arrival order; ``inflight`` is the
+        union of running submissions' signatures. Unblocked submissions
+        are ranked by shared weight (descending) then arrival; blocked
+        ones (they would lease-wait on a running sibling) are considered
+        only when no unblocked submission exists — a lease-following
+        sibling still beats an idle slot.
+        """
+        if not queued:
+            return None
+        if self.mode == "fifo":
+            return queued[0]
+        inflight = set(inflight)
+        # One store stat per signature per decision: queued siblings
+        # largely share signatures, and this may run under the server
+        # lock on a slow filesystem.
+        memo: dict[str, bool] = {}
+
+        def has(sig: str) -> bool:
+            v = memo.get(sig)
+            if v is None:
+                v = memo[sig] = self.store.has(sig)
+            return v
+
+        best: _SchedJob | None = None
+        best_key: tuple | None = None
+        for job in queued:
+            is_blocked = self.blocked(job, inflight, has)
+            key = (is_blocked,
+                   self.overlap_weight(job, inflight, has)
+                   if is_blocked else 0.0,
+                   -self.shared_weight(job, has), job.seq)
+            if best_key is None or key < best_key:
+                best, best_key = job, key
+        return best

@@ -1,0 +1,669 @@
+"""Long-running per-host session server: many clients, one store, global
+scheduling.
+
+Helix (the paper) accelerates one developer's loop; PR 2 let K sweep
+variants share one store through lease contention. :class:`SessionServer`
+is the ROADMAP's next step: a service that *owns* the workdir and
+multiplexes every submission — local calls, unix-socket or TCP clients —
+onto one shared :class:`~repro.core.store.Store`, one
+:class:`~repro.core.costs.CostModel`, one storage-budget ledger, and one
+process-wide executor worker pool, scheduling across submissions with
+global knowledge (see scheduler.py):
+
+* submissions are compiled at submit time; their signature sets feed a
+  live cross-client **multiplicity map**;
+* runnable work is ordered **shared-prefix-first**; siblings of an
+  in-flight shared computation yield their slot to independent work (they
+  would mostly block on the lease) and, when nothing independent remains,
+  lease-follow the leader one node behind;
+* the multiplicity map feeds OMP as observed amortization
+  (``Materializer.multiplicity``), superseding the static horizon≈K
+  heuristic of PR 2's sweeps;
+* all sessions draw executor workers from one
+  :class:`~repro.serve.pool.SharedWorkerPool` instead of pooling
+  independently.
+
+``run_sweep`` is now a thin client of this server: a sweep is just K
+submissions (see ``repro.core.sweep``).
+
+Because callables cannot cross a wire, remote clients submit workflows *by
+registry name* plus JSON params; in-process callers may submit
+:class:`~repro.core.workflow.Workflow` objects (or zero-arg factories)
+directly. See protocol.py for the frame format and message schema.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import socket
+import threading
+import time
+import uuid
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Mapping
+
+from ..core.costs import CostModel
+from ..core.locking import StorageLedger
+from ..core.omp import Policy
+from ..core.session import IterationReport, IterativeSession
+from ..core.signature import compute_signatures
+from ..core.store import Store
+from ..core.workflow import Workflow
+from .pool import SharedWorkerPool
+from .protocol import jsonable, recv_msg, send_msg
+from .scheduler import PrefixScheduler
+
+
+class SharedNonces:
+    """Server-wide nonce map for nondeterministic nodes.
+
+    First access per node name draws the nonce; every later compilation
+    reuses it, so identical unseeded operators across clients become
+    equivalent (computed once fleet-wide) — morally "fix the seed for this
+    server". Signatures still differ across submissions whose node
+    *versions* differ.
+    """
+
+    def __init__(self) -> None:
+        self._nonces: dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def get(self, name: str, default: str | None = None) -> str:
+        """Return the pinned nonce for ``name``, drawing it on first use."""
+        with self._lock:
+            if name not in self._nonces:
+                self._nonces[name] = uuid.uuid4().hex
+            return self._nonces[name]
+
+
+class _LiveShareView:
+    """Live ``share_sigs`` view over the scheduler's multiplicity map.
+
+    The executor force-persists lease-computed values whose signature is
+    ``in`` this set; backing it by the live map (instead of a frozen
+    pre-pass snapshot) means a client that arrives *mid-computation* of a
+    prefix still gets it persisted."""
+
+    def __init__(self, scheduler: PrefixScheduler):
+        self._scheduler = scheduler
+
+    def __contains__(self, sig: object) -> bool:
+        return self._scheduler.multiplicity(str(sig)) >= 2
+
+
+@dataclasses.dataclass
+class Job:
+    """One submitted workflow: lifecycle, timings, and result."""
+
+    id: str
+    name: str
+    workflow: Workflow
+    sigs: frozenset
+    seq: int
+    submitted_at: float
+    status: str = "queued"   # queued | running | done | error | cancelled
+    dispatched_at: float | None = None
+    finished_at: float | None = None
+    run_seconds: float = 0.0
+    report: IterationReport | None = None
+    error: BaseException | None = None
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    @property
+    def queued_seconds(self) -> float:
+        """Time spent waiting for a session slot."""
+        end = self.dispatched_at if self.dispatched_at is not None \
+            else time.perf_counter()
+        return max(0.0, end - self.submitted_at)
+
+
+class SessionServer:
+    """Multiplex many workflow submissions onto one shared store.
+
+    Parameters mirror :class:`~repro.core.session.IterativeSession` where
+    they are forwarded to the per-submission sessions; server-level knobs:
+
+    ``registry``
+        ``{name: factory}`` of workflows remote clients may submit;
+        ``factory(**params)`` runs server-side and returns a ``Workflow``.
+    ``n_sessions``
+        Session slots: how many submissions run concurrently.
+    ``pool_workers``
+        Size of the process-wide :class:`SharedWorkerPool` all sessions'
+        executors draw from (default: ``max(n_sessions, max_workers)``).
+    ``schedule``
+        ``"prefix"`` (shared-prefix-first with sibling deferral — the
+        point of this server) or ``"fifo"`` (arrival order, PR 2's
+        lease-contention-only behavior, kept as the benchmark baseline).
+    ``share_nondet``
+        Pin one nonce map server-wide so identical nondeterministic
+        operators are shared across clients (see :class:`SharedNonces`).
+    ``horizon``
+        Static amortization floor forwarded to OMP. ``None`` (default)
+        means 1.0 — under ``schedule="prefix"`` the live multiplicity map
+        supersedes the old horizon≈K guess, so no static K is needed.
+        (``schedule="fifo"`` keeps amortization purely static, exactly
+        PR 2's behavior — pass ``horizon=K`` to reproduce it.)
+    ``max_finished_jobs``
+        Finished jobs retained for late ``wait``/``job`` queries (their
+        reports pin workflow outputs in memory). Oldest beyond this are
+        evicted; clients can also release one eagerly with the
+        ``forget`` op.
+    """
+
+    def __init__(self, workdir: str, *,
+                 registry: Mapping[str, Callable[..., Workflow]]
+                 | None = None,
+                 n_sessions: int = 4,
+                 pool_workers: int | None = None,
+                 schedule: str = "prefix",
+                 policy: Policy = Policy.OPT,
+                 storage_budget_bytes: float = float("inf"),
+                 max_workers: int = 1,
+                 prefetch_depth: int = 4,
+                 async_materialization: bool = False,
+                 share_nondet: bool = True,
+                 dedupe_inflight: bool = True,
+                 dedupe_wait_seconds: float = 3600.0,
+                 purge_stale: bool = False,
+                 horizon: float | None = None,
+                 poll_interval: float = 0.05,
+                 max_finished_jobs: int = 1024):
+        os.makedirs(workdir, exist_ok=True)
+        self.workdir = workdir
+        self.registry = dict(registry or {})
+        self.n_sessions = max(1, int(n_sessions))
+        self.policy = policy
+        self.storage_budget_bytes = storage_budget_bytes
+        self.max_workers = max(1, int(max_workers))
+        self.prefetch_depth = prefetch_depth
+        self.async_materialization = async_materialization
+        self.share_nondet = share_nondet
+        self.dedupe_inflight = dedupe_inflight
+        self.dedupe_wait_seconds = dedupe_wait_seconds
+        self.purge_stale = purge_stale
+        self.horizon = 1.0 if horizon is None else float(horizon)
+        self.poll_interval = poll_interval
+
+        # One store / cost model / ledger / worker pool for every session
+        # this server hosts. Reconcile the shared budget ledger with disk
+        # unless another process's fleet is mid-run on this workdir (its
+        # live reservations must not be erased).
+        self.store = Store(os.path.join(workdir, "store"))
+        self.cost_model = CostModel(os.path.join(workdir, "costs.json"))
+        if not self.store.any_live_lease():
+            StorageLedger(self.store.ledger_path).reset(
+                float(self.store.total_bytes()))
+        self.pool = SharedWorkerPool(
+            pool_workers if pool_workers is not None
+            else max(self.n_sessions, self.max_workers))
+        self.nonces: SharedNonces | None = \
+            SharedNonces() if share_nondet else None
+        self.scheduler = PrefixScheduler(self.store, self.cost_model,
+                                         mode=schedule)
+        self._share_view = _LiveShareView(self.scheduler)
+
+        self._cv = threading.Condition()
+        self._jobs: dict[str, Job] = {}
+        self._queue: list[Job] = []
+        self._running: dict[str, Job] = {}
+        self.max_finished_jobs = max(0, int(max_finished_jobs))
+        self._finished_order: list[str] = []   # eviction ring (FIFO)
+        self._seq = 0
+        self._accepting = True
+        self._stop = False
+        self._held = 0
+        self._shutdown_started = False
+        self.dispatch_log: list[str] = []
+
+        self._job_pool = ThreadPoolExecutor(
+            max_workers=self.n_sessions, thread_name_prefix="helix-serve")
+        self._listeners: list[socket.socket] = []
+        self._conns: set[socket.socket] = set()
+        self._threads: list[threading.Thread] = []
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="helix-serve-dispatch",
+            daemon=True)
+        self._dispatcher.start()
+
+    # -- submission --------------------------------------------------------
+    def submit(self, workflow: Workflow | Callable[[], Workflow], *,
+               name: str | None = None) -> Job:
+        """Submit a workflow (or a zero-arg factory) for execution.
+
+        Compiles it immediately — under the server's shared nonce map —
+        to learn its signature set, registers those signatures in the
+        cross-client multiplicity map, and enqueues the job for the
+        global scheduler. Returns the :class:`Job` handle; use
+        :meth:`wait` for the result.
+        """
+        wf = workflow if isinstance(workflow, Workflow) else workflow()
+        dag = wf.build()
+        sigs = frozenset(
+            compute_signatures(dag, nonces=self.nonces).values())
+        with self._cv:
+            if not self._accepting:
+                raise RuntimeError("server is draining / shut down")
+            self._seq += 1
+            job = Job(id=f"j{self._seq}-{uuid.uuid4().hex[:8]}",
+                      name=name or wf.name or f"job{self._seq}",
+                      workflow=wf, sigs=sigs, seq=self._seq,
+                      submitted_at=time.perf_counter())
+            self._jobs[job.id] = job
+            self._queue.append(job)
+            self.scheduler.add(job)
+            self._cv.notify_all()
+        return job
+
+    def submit_named(self, workflow: str, params: Mapping[str, Any]
+                     | None = None, *, name: str | None = None) -> Job:
+        """Submit a registered workflow by name (the RPC path)."""
+        if workflow not in self.registry:
+            known = ", ".join(sorted(self.registry)) or "none"
+            raise KeyError(
+                f"unknown workflow {workflow!r}; registered: {known}")
+        factory = self.registry[workflow]
+        wf = factory(**dict(params or {}))
+        return self.submit(wf, name=name or workflow)
+
+    @contextlib.contextmanager
+    def hold_dispatch(self):
+        """Pause dispatching while a batch is submitted, so the scheduler
+        sees the whole batch's multiplicities before ordering it."""
+        with self._cv:
+            self._held += 1
+        try:
+            yield self
+        finally:
+            with self._cv:
+                self._held -= 1
+                self._cv.notify_all()
+
+    # -- waiting / inspection ----------------------------------------------
+    def wait(self, job: Job | str, timeout: float | None = None) -> Job:
+        """Block until ``job`` (handle or id) finishes; returns the Job."""
+        j = job if isinstance(job, Job) else self._jobs[job]
+        if not j.done.wait(timeout):
+            raise TimeoutError(f"job {j.id} still {j.status}")
+        return j
+
+    def wait_all(self, jobs: list[Job] | None = None,
+                 timeout: float | None = None) -> list[Job]:
+        """Wait for the given jobs (default: every submitted job)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        targets = list(jobs) if jobs is not None else list(
+            self._jobs.values())
+        for j in targets:
+            left = None if deadline is None \
+                else max(0.0, deadline - time.monotonic())
+            self.wait(j, timeout=left)
+        return targets
+
+    def multiplicity(self, sig: str) -> int:
+        """Live submissions (queued or running) needing ``sig``."""
+        return self.scheduler.multiplicity(sig)
+
+    def status(self) -> dict:
+        """JSON-safe snapshot of server state (the ``status`` RPC)."""
+        with self._cv:
+            snapshot = {
+                "workdir": self.workdir,
+                "schedule": self.scheduler.mode,
+                "accepting": self._accepting,
+                "n_sessions": self.n_sessions,
+                "queued": len(self._queue),
+                "running": len(self._running),
+                "total_jobs": len(self._jobs),
+                "pool": self.pool.stats(),
+            }
+        # Store I/O stays outside the dispatch lock: an index read must
+        # never stall submits/completions behind a slow filesystem.
+        snapshot["store_bytes"] = self.store.total_bytes()
+        return snapshot
+
+    def job_summary(self, job: Job | str) -> dict:
+        """JSON-safe summary of one job (the ``job``/``wait`` RPCs)."""
+        j = job if isinstance(job, Job) else self._jobs[job]
+        out: dict[str, Any] = {
+            "job": j.id, "name": j.name, "status": j.status,
+            "queued_seconds": round(j.queued_seconds, 6),
+            "run_seconds": round(j.run_seconds, 6),
+        }
+        if j.error is not None:
+            out["error"] = f"{type(j.error).__name__}: {j.error}"
+        if j.report is not None:
+            ex = j.report.execution
+            out["execution"] = {
+                "n_computed": ex.n_computed, "n_loaded": ex.n_loaded,
+                "n_pruned": ex.n_pruned, "n_deduped": len(ex.deduped),
+                "total_seconds": round(ex.total_seconds, 6),
+                "mat_seconds": round(ex.mat_seconds, 6),
+            }
+            out["outputs"] = jsonable(j.report.outputs)
+        return out
+
+    # -- scheduling --------------------------------------------------------
+    def _inflight_sigs_locked(self) -> set[str]:
+        out: set[str] = set()
+        for job in self._running.values():
+            out |= job.sigs
+        return out
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                job = None
+                while not self._stop:
+                    if (not self._held and self._queue
+                            and len(self._running) < self.n_sessions):
+                        # pick() always returns a job for a non-empty
+                        # queue: blocked siblings are dispatched (they
+                        # lease-follow the leader) when nothing
+                        # independent is available — never an idle slot.
+                        job = self.scheduler.pick(
+                            self._queue, self._inflight_sigs_locked())
+                        break
+                    # Sleep until a submit / completion / hold-release
+                    # notifies (the timeout is only a lost-notify guard).
+                    self._cv.wait(timeout=1.0)
+                if self._stop:
+                    return
+                self._queue.remove(job)
+                job.status = "running"
+                job.dispatched_at = time.perf_counter()
+                self._running[job.id] = job
+                self.dispatch_log.append(job.name)
+            self._job_pool.submit(self._run_job, job)
+
+    def _omp_multiplicity(self, sig: str) -> float:
+        """Expected future loads of ``sig``: live siblings now, or the
+        fleet's historically observed reuse (capped — history should tilt
+        the threshold, not nuke it)."""
+        live_others = max(0, self.scheduler.multiplicity(sig) - 1)
+        hist = self.cost_model.reuse_count(sig)
+        return float(max(live_others, min(hist, 64.0)))
+
+    def _run_job(self, job: Job) -> None:
+        t0 = time.perf_counter()
+        try:
+            sess = IterativeSession(
+                self.workdir, policy=self.policy,
+                storage_budget_bytes=self.storage_budget_bytes,
+                async_materialization=self.async_materialization,
+                horizon=self.horizon, max_workers=self.max_workers,
+                prefetch_depth=self.prefetch_depth,
+                dedupe_inflight=self.dedupe_inflight,
+                dedupe_wait_seconds=self.dedupe_wait_seconds,
+                shared_budget=True, purge_stale=self.purge_stale,
+                nondet_reusable=self.share_nondet,
+                store=self.store, cost_model=self.cost_model,
+                worker_pool=self.pool,
+                # Observed amortization belongs to the globally-aware
+                # schedule; "fifo" keeps OMP purely static so it remains
+                # a faithful PR 2 baseline (pass horizon=K to match).
+                multiplicity=(self._omp_multiplicity
+                              if self.scheduler.mode == "prefix"
+                              else None))
+            job.report = sess.run(job.workflow, nonces=self.nonces,
+                                  share_sigs=self._share_view)
+            job.status = "done"
+        except BaseException as e:
+            job.error = e
+            job.status = "error"
+        finally:
+            job.run_seconds = time.perf_counter() - t0
+            job.finished_at = time.perf_counter()  # same base as the
+            # submitted_at/dispatched_at stamps, so deltas are meaningful
+            with self._cv:
+                self._running.pop(job.id, None)
+                self.scheduler.remove(job)
+                self._retain_finished_locked(job)
+                self._cv.notify_all()
+            job.done.set()
+
+    def _retain_finished_locked(self, job: Job) -> None:
+        """Bound the finished-job history: a long-running server must not
+        pin every past submission's outputs in memory forever."""
+        self._finished_order.append(job.id)
+        while len(self._finished_order) > self.max_finished_jobs:
+            evicted = self._finished_order.pop(0)
+            self._jobs.pop(evicted, None)
+
+    def forget(self, job: Job | str) -> bool:
+        """Release a finished job's record (and its report) eagerly.
+
+        Returns False when the job is unknown or still queued/running."""
+        job_id = job.id if isinstance(job, Job) else job
+        with self._cv:
+            j = self._jobs.get(job_id)
+            if j is None or not j.done.is_set():
+                return False
+            self._jobs.pop(job_id, None)
+            try:
+                self._finished_order.remove(job_id)
+            except ValueError:
+                pass
+        return True
+
+    # -- lifecycle ---------------------------------------------------------
+    def drain(self, timeout: float | None = None) -> bool:
+        """Stop accepting submissions and wait for all live work to finish.
+
+        Returns True when the queue and running set emptied within
+        ``timeout`` (None = wait forever). The server stays up — already
+        submitted jobs complete normally; new submissions are rejected.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            self._accepting = False
+            self._cv.notify_all()
+            while self._queue or self._running:
+                left = None if deadline is None \
+                    else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    return False
+                self._cv.wait(timeout=left if left is not None
+                              else self.poll_interval)
+        return True
+
+    def shutdown(self, drain: bool = True,
+                 timeout: float | None = None) -> None:
+        """Stop the server. ``drain=True`` (default) finishes submitted
+        work first (graceful); ``drain=False`` cancels queued jobs and
+        waits only for the currently running ones. Idempotent."""
+        with self._cv:
+            if self._shutdown_started:
+                return
+            self._shutdown_started = True
+            self._accepting = False
+        if drain:
+            self.drain(timeout)
+        with self._cv:
+            for job in self._queue:
+                job.status = "cancelled"
+                job.error = RuntimeError("server shut down")
+                # Freeze queued_seconds at cancellation time (it is
+                # computed against "now" while dispatched_at is unset).
+                job.dispatched_at = time.perf_counter()
+                job.finished_at = job.dispatched_at
+                self.scheduler.remove(job)
+                job.done.set()
+            self._queue.clear()
+            self._stop = True
+            self._cv.notify_all()
+        self._dispatcher.join(timeout=30.0)
+        self._job_pool.shutdown(wait=True)
+        for sock in self._listeners:
+            # close() alone does not wake a thread blocked in accept():
+            # the in-progress syscall keeps the listening file
+            # description alive (and accepting!) until it returns. Close,
+            # then poke the address with a throwaway connection so the
+            # blocked accept returns and the loop exits on the dead fd.
+            family = sock.family
+            try:
+                addr = sock.getsockname()
+            except OSError:
+                addr = None
+            try:
+                sock.close()
+            except OSError:
+                pass
+            if addr:
+                try:
+                    dummy = socket.socket(family, socket.SOCK_STREAM)
+                    dummy.settimeout(0.5)
+                    dummy.connect(addr)
+                    dummy.close()
+                except OSError:
+                    pass
+                if family == socket.AF_UNIX:
+                    try:
+                        os.unlink(addr)
+                    except OSError:
+                        pass
+        for conn in list(self._conns):
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def __enter__(self) -> "SessionServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- RPC ---------------------------------------------------------------
+    def serve_unix(self, path: str) -> str:
+        """Listen on a unix domain socket; returns the bound path.
+
+        A stale socket file (dead previous server) is removed; a *live*
+        one is refused rather than hijacked — restarting over a
+        still-draining server must fail loudly, not steal its clients.
+        """
+        if os.path.exists(path):
+            probe = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            try:
+                probe.settimeout(0.5)
+                probe.connect(path)
+                probe.close()
+                raise RuntimeError(
+                    f"another server is live on {path}")
+            except (ConnectionRefusedError, FileNotFoundError,
+                    socket.timeout, TimeoutError):
+                probe.close()
+                os.unlink(path)   # dead leftover: safe to reclaim
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.bind(path)
+        self._start_listener(sock)
+        return path
+
+    def serve_tcp(self, host: str = "127.0.0.1",
+                  port: int = 0) -> tuple[str, int]:
+        """Listen on TCP; returns the bound ``(host, port)``."""
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((host, port))
+        self._start_listener(sock)
+        return sock.getsockname()
+
+    def _start_listener(self, sock: socket.socket) -> None:
+        sock.listen(16)
+        self._listeners.append(sock)
+        t = threading.Thread(target=self._listen_loop, args=(sock,),
+                             name="helix-serve-listen", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _listen_loop(self, sock: socket.socket) -> None:
+        while True:
+            try:
+                conn, _ = sock.accept()
+            except OSError:
+                return   # listener closed by shutdown
+            self._conns.add(conn)
+            t = threading.Thread(target=self._conn_loop, args=(conn,),
+                                 name="helix-serve-conn", daemon=True)
+            t.start()
+            # Prune dead handler threads so a long-running server's
+            # bookkeeping stays O(live connections), not O(ever accepted).
+            self._threads = [x for x in self._threads if x.is_alive()]
+            self._threads.append(t)
+
+    def _conn_loop(self, conn: socket.socket) -> None:
+        try:
+            while True:
+                try:
+                    msg = recv_msg(conn)
+                except Exception:
+                    return
+                if msg is None:
+                    return
+                resp = self._handle(msg)
+                try:
+                    send_msg(conn, resp)
+                except OSError:
+                    return
+                if isinstance(msg, dict) and msg.get("op") == "shutdown":
+                    # Reply first, then stop the server from a separate
+                    # thread (shutdown joins pools this handler is not
+                    # part of, but keep the reply latency minimal).
+                    threading.Thread(target=self.shutdown,
+                                     daemon=True).start()
+                    return
+        finally:
+            self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _handle(self, msg: Any) -> dict:
+        """Serve one protocol request (shared by socket handlers and the
+        in-process client — see protocol.py for the schema)."""
+        if not isinstance(msg, dict):
+            return {"ok": False, "error": "message must be a JSON object"}
+        op = msg.get("op")
+        try:
+            if op == "hello":
+                return {"ok": True, "server": "helix-session-server",
+                        "workdir": self.workdir,
+                        "schedule": self.scheduler.mode,
+                        "workflows": sorted(self.registry)}
+            if op == "submit":
+                job = self.submit_named(msg.get("workflow", ""),
+                                        msg.get("params"),
+                                        name=msg.get("name"))
+                return {"ok": True, "job": job.id, "name": job.name}
+            if op in ("job", "wait"):
+                job_id = msg.get("job")
+                if job_id not in self._jobs:
+                    return {"ok": False, "error": f"unknown job {job_id!r}"}
+                job = self._jobs[job_id]
+                if op == "wait" and not job.done.wait(msg.get("timeout")):
+                    # Mirror SessionServer.wait: a timeout is an error the
+                    # client can catch, never a partial summary the
+                    # caller would mistake for a finished job.
+                    return {"ok": False, "error":
+                            f"TimeoutError: job {job_id} still "
+                            f"{job.status}"}
+                return {"ok": True, **self.job_summary(job)}
+            if op == "forget":
+                return {"ok": True,
+                        "forgotten": self.forget(str(msg.get("job", "")))}
+            if op == "status":
+                return {"ok": True, **self.status()}
+            if op == "multiplicity":
+                sig = str(msg.get("sig", ""))
+                return {"ok": True, "sig": sig,
+                        "multiplicity": self.multiplicity(sig)}
+            if op == "drain":
+                return {"ok": True, "drained": self.drain(
+                    msg.get("timeout"))}
+            if op == "shutdown":
+                return {"ok": True, "stopping": True}
+            return {"ok": False, "error": f"unknown op {op!r}"}
+        except Exception as e:
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}

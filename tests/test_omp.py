@@ -80,6 +80,30 @@ def test_amortized_horizon_materializes_more():
     assert m5.decide(dag, "n0", states, runtime, 6.0, 1).materialize
 
 
+def test_multiplicity_supersedes_static_horizon():
+    """ISSUE 3: observed per-signature multiplicity (the session server's
+    live cross-client map) lifts the amortization for exactly the shared
+    signatures, leaving unshared ones at the static-horizon threshold."""
+    dag = chain(2)
+    states = {"n0": State.COMPUTE, "n1": State.COMPUTE}
+    runtime = {"n0": 10.0, "n1": 0.1}
+    mult = {"shared-sig": 4.0}
+    m = Materializer(policy=Policy.OPT, horizon=1.0,
+                     multiplicity=lambda sig: mult.get(sig, 0.0))
+    # l = 6, C = 10: paper threshold 2·6 = 12 > 10 → skip when unshared…
+    d = m.decide(dag, "n0", states, runtime, 6.0, 1, sig="lone-sig")
+    assert not d.materialize
+    # …but 4 live siblings amortize it: (1 + 1/4)·6 = 7.5 < 10 → persist
+    d = m.decide(dag, "n0", states, runtime, 6.0, 1, sig="shared-sig")
+    assert d.materialize
+    # the static horizon stays an explicit floor over the observed map
+    m_floor = Materializer(policy=Policy.OPT, horizon=5.0,
+                           multiplicity=lambda sig: 0.0)
+    assert m_floor.effective_horizon("anything") == 5.0
+    d = m_floor.decide(dag, "n0", states, runtime, 6.0, 1, sig="lone-sig")
+    assert d.materialize
+
+
 def test_paper_pathological_chain_documented():
     """§5.3 'Limitations of Streaming OMP': chain with l_i = i, c_i = 3 —
     Algorithm 2 materializes every node (storage O(m²)). We reproduce the

@@ -110,6 +110,7 @@ def test_sweep_computes_shared_prefix_exactly_once(tmp_path):
     assert calls.counts["eval"] == len(REGS)
     # and the report agrees: no signature was computed by two variants
     assert all(n == 1 for n in sweep.fleet_computes().values())
+    assert sweep.wasted_recomputes() == 0
 
 
 def test_sweep_shared_budget_respected(tmp_path):

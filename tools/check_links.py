@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs CI job (no external deps).
+
+Checks every ``[text](target)`` markdown link in the given files:
+
+* relative file links must exist on disk (anchors are stripped; ``#foo``
+  anchors within the same file are checked against its headings);
+* ``http(s)`` URLs are format-checked only (CI must not flake on the
+  network);
+* code spans and fenced code blocks are ignored.
+
+Exit code 1 lists every broken link with file:line.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+URL_RE = re.compile(r"^[a-z][a-z0-9+.-]*://\S+$")
+
+
+def heading_anchor(text: str) -> str:
+    """GitHub-style anchor for a heading line."""
+    text = re.sub(r"[`*_]", "", text.strip().lower())
+    text = re.sub(r"[^\w\s-]", "", text)
+    return re.sub(r"[\s]+", "-", text).strip("-")
+
+
+def strip_code(lines: list[str]) -> list[str]:
+    """Blank out fenced code blocks and inline code spans."""
+    out, fenced = [], False
+    for line in lines:
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            out.append("")
+            continue
+        out.append("" if fenced else re.sub(r"`[^`]*`", "", line))
+    return out
+
+
+def check_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        raw = f.read().splitlines()
+    lines = strip_code(raw)
+    anchors = {heading_anchor(m.group(1))
+               for line in raw for m in [HEADING_RE.match(line)] if m}
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    for i, line in enumerate(lines, 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if URL_RE.match(target):
+                continue  # external: format already validated by the regex
+            if target.startswith("mailto:"):
+                continue
+            if target.startswith("#"):
+                if heading_anchor(target[1:]) not in anchors \
+                        and target[1:] not in anchors:
+                    errors.append(f"{path}:{i}: missing anchor {target}")
+                continue
+            rel = target.split("#", 1)[0]
+            if rel and not os.path.exists(os.path.join(base, rel)):
+                errors.append(f"{path}:{i}: missing file {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = argv or ["README.md"]
+    all_errors: list[str] = []
+    for path in files:
+        if not os.path.exists(path):
+            all_errors.append(f"{path}: file not found")
+            continue
+        all_errors.extend(check_file(path))
+    for e in all_errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not all_errors else f'{len(all_errors)} broken'}")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
