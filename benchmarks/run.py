@@ -22,6 +22,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_server_reuse        — ISSUE 3: the session server's global
       shared-prefix-first schedule vs. PR 2's lease-contention FIFO at
       equal concurrency (K variants, K/2 session slots).
+  bench_eviction            — ISSUE 4: evict-to-admit vs
+      refuse-on-exhausted at a budget ~50% of the sweep working set,
+      store pre-squatted by stale junk; also checks ledger==disk at
+      drain.
 
 Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list),
 HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine),
@@ -365,6 +369,90 @@ def bench_server_reuse() -> None:
               f"planner_recomputed={deliberate['prefix']}", flush=True)
 
 
+def bench_eviction() -> None:
+    """ISSUE 4: evict-to-admit vs refuse-on-exhausted under a storage
+    budget sized to ~50% of the sweep's working set, with the budget
+    pre-squatted by stale low-benefit junk (the motivating pathology:
+    entries with no recompute-cost metadata and no observed reuse hold
+    the budget forever).
+
+    Three runs per workflow: one unconstrained sweep to *measure* the
+    working set, then the same grid twice against a junk-filled store at
+    half that budget — ``evict_to_admit=False`` (refuse-only baseline:
+    nothing can be persisted, in-flight dedupe cannot force-persist
+    shared values, so siblings serialize on compute leases and then
+    recompute) vs ``True`` (the evictor clears junk, shared prefixes
+    persist and are loaded). Reports wall clock, duplicate computes,
+    eviction stats, and the ledger-vs-disk drift at drain (must be 0).
+    """
+    from repro.core import Store, StorageLedger, grid, run_sweep
+
+    n_var = int(os.environ.get("HELIX_BENCH_SWEEP_VARIANTS", "4"))
+    sweep_scale = float(os.environ.get("HELIX_BENCH_SWEEP_SCALE", "1"))
+    regs = [0.03, 0.3, 0.01, 1.0, 0.1, 3.0]
+    n_regs = max(1, (n_var + 1) // 2)
+    cases = {
+        "census": (W.CensusKnobs(n_rows=max(2000,
+                                            int(120_000 * sweep_scale))),
+                   W.build_census,
+                   {"reg": regs[:n_regs], "eval_threshold": [0.5, 0.7]}),
+        "mnist": (W.MNISTKnobs(n_images=max(500,
+                                            int(12_000 * sweep_scale)),
+                               epochs=max(5, int(60 * sweep_scale))),
+                  W.build_mnist,
+                  {"reg": [r * 1e-2 for r in regs[:n_regs]],
+                   "eval_k": [1, 2]}),
+    }
+    rng = np.random.default_rng(0)
+    for name, (base, build, axes) in cases.items():
+        variants = grid(base, axes, build, name=name)[:n_var]
+        n_eff = len(variants)
+        # 1) measure the working set (unconstrained cold sweep)
+        workdir = os.path.join(ROOT, f"{name}_evict_ws")
+        shutil.rmtree(workdir, ignore_errors=True)
+        ws_report = run_sweep(workdir, variants)
+        ws_report.raise_errors()
+        ws = max(ws_report.store_bytes, 1)
+        budget = max(ws // 2, 1)
+        # 2) same grid at 50% budget, store pre-squatted with junk
+        chunk = max(512, budget // (8 * 6))   # ≈6 junk entries
+        walls, dups, drift = {}, {}, {}
+        ev_stats: dict = {}
+        for mode in ("refuse", "evict"):
+            workdir = os.path.join(ROOT, f"{name}_evict_{mode}")
+            shutil.rmtree(workdir, ignore_errors=True)
+            store = Store(os.path.join(workdir, "store"))
+            junk, i = 0, 0
+            while junk < budget:
+                junk += store.save(f"junk{i:04d}", "junk",
+                                   rng.standard_normal(chunk)).nbytes
+                i += 1
+            report = run_sweep(workdir, variants,
+                               storage_budget_bytes=float(budget),
+                               evict_to_admit=(mode == "evict"))
+            report.raise_errors()
+            walls[mode] = report.wall_seconds
+            dups[mode] = sum(c - 1
+                             for c in report.fleet_computes().values()
+                             if c > 1)
+            ev_stats[mode] = report.evictions
+            drift[mode] = (StorageLedger(store.ledger_path).used()
+                           - store.total_bytes())
+        ev = ev_stats["evict"]
+        speedup = walls["refuse"] / max(walls["evict"], 1e-9)
+        print(f"{name}_eviction,"
+              f"{walls['evict'] * 1e6 / n_eff:.0f},"
+              f"refuse_s={walls['refuse']:.2f};"
+              f"evict_s={walls['evict']:.2f};"
+              f"speedup={speedup:.2f}x;variants={n_eff};"
+              f"ws_kb={ws / 1024:.0f};budget_kb={budget / 1024:.0f};"
+              f"dup_refuse={dups['refuse']};dup_evict={dups['evict']};"
+              f"evicted={ev.get('n_evicted', 0)};"
+              f"vetoed_live={ev.get('n_vetoed_live', 0)};"
+              f"ledger_drift_b={drift['evict']:.0f};"
+              f"ledger_drift_refuse_b={drift['refuse']:.0f}", flush=True)
+
+
 def bench_engine_overlap() -> None:
     """Scheduler-overlap ceiling: a wide diamond of GIL-releasing 150 ms
     wait stubs (no CPU contention). Near-width× speedup means the ready-set
@@ -409,6 +497,7 @@ def main() -> None:
     bench_parallel_speedup()
     bench_sweep_reuse()
     bench_server_reuse()
+    bench_eviction()
     bench_engine_overlap()
 
 

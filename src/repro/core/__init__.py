@@ -6,6 +6,7 @@ from .dag import DAG, Kind, Node, State, validate_states
 from .signature import compute_signatures, source_version
 from .oep import plan, plan_runtime, brute_force_plan
 from .omp import Materializer, Policy, cumulative_runtime
+from .eviction import EvictionStats, Evictor
 from .store import ComputeLease, Store, tree_nbytes
 from .locking import FileLock, SharedEwma, StorageLedger
 from .costs import CostModel
@@ -21,6 +22,7 @@ __all__ = [
     "compute_signatures", "source_version",
     "plan", "plan_runtime", "brute_force_plan",
     "Materializer", "Policy", "cumulative_runtime",
+    "EvictionStats", "Evictor",
     "ComputeLease", "Store", "tree_nbytes", "CostModel",
     "FileLock", "SharedEwma", "StorageLedger",
     "ExecutionReport", "execute",

@@ -150,3 +150,12 @@ class CostModel:
     def reuse_count(self, sig: str) -> float:
         """Observed lifetime reuse events for ``sig`` (fleet-merged)."""
         return float(self.reuse.get(sig, 0.0))
+
+    def reuse_counts(self) -> dict[str, float]:
+        """One consistent snapshot of every signature's observed reuse
+        count (fleet-merged at the last flush plus events witnessed here
+        since). The evictor ranks a whole store against this, so it wants
+        one locked copy rather than a per-signature race with a
+        concurrent ``save()``'s dict swap."""
+        with self._lock:
+            return {sig: float(v) for sig, v in self.reuse.items()}

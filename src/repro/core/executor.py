@@ -31,7 +31,11 @@ With ``max_workers=1`` the scheduler degenerates to exactly the sequential
 topological sweep — same execution order, same decision order, same store
 traffic — so the OEP/OMP invariants and the Theorem-1 correctness argument
 carry over verbatim, and any worker count yields identical outputs and
-decisions on deterministic nodes.
+decisions on deterministic nodes. One carve-out: with an evictor attached
+(evict-to-admit), over-budget admissions are deferred off the scheduler
+lock — at ``max_workers=1`` they still happen in decision order, but
+under parallel workers admission order may interleave (the same
+nondeterminism class as the fleet-shared ledger itself).
 
 Materialization writes run off the critical path when
 ``async_materialization`` is set: values are handed to the store's dedicated
@@ -67,7 +71,8 @@ from typing import Any, Callable, Mapping
 import jax
 
 from .dag import DAG, State
-from .omp import Materializer
+from .eviction import benefit_density
+from .omp import Materializer, cumulative_runtime
 from .store import Store, tree_nbytes
 
 
@@ -297,13 +302,33 @@ class _Scheduler:
             return
         n_waiting = lease.waiters()
         est_bytes = tree_nbytes(value)
+        est_load = self.store.est_load_seconds(est_bytes)
         if (sig not in self.share_sigs and n_waiting == 0
-                and self.store.est_load_seconds(est_bytes)
-                >= compute_seconds):
+                and est_load >= compute_seconds):
             return  # nobody wants it and recompute is cheaper than load
-        if not self.materializer.try_reserve(est_bytes):
+        # Benefit metadata for fleet eviction: C(n) per Def. 6 — the node's
+        # own measured compute plus its ancestors' realized runtimes (all
+        # finished: they are its inputs). self.runtime has no entry for
+        # this node yet (the worker records it after _run_node returns).
+        with self.cv:
+            rt = dict(self.runtime)
+        rt[name] = compute_seconds
+        c_cum = cumulative_runtime(self.dag, name, self.states, rt)
+        # Evict-to-admit may clear space, but only of entries less
+        # valuable than this one. Expected future loads: registered
+        # waiters now, or the materializer's multiplicity-aware horizon
+        # (known-shared signatures whose siblings have not reached the
+        # waiter registration yet must not get a weaker admission limit
+        # than the same signature would get on the decide path).
+        expected = max(float(n_waiting),
+                       self.materializer.effective_horizon(sig) - 1.0)
+        density = benefit_density(c_cum, est_load, expected)
+        if not self.materializer.try_reserve(est_bytes,
+                                             benefit_density=density):
             return  # no budget: waiters recompute after the timeout/retry
-        info = self._budgeted_save(sig, name, value, est_bytes)
+        extra = {"compute_s": c_cum, "load_s_est": est_load}
+        info = self._budgeted_save(sig, name, value, est_bytes,
+                                   extra_meta=extra)
         with self.cv:
             self.mat_seconds += info.seconds
             self.materialized[name] = (
@@ -311,19 +336,51 @@ class _Scheduler:
                 if n_waiting else "in-flight dedupe: shared signature")
 
     def _budgeted_save(self, sig: str, name: str, value: Any,
-                       est_bytes: float) -> Any:
+                       est_bytes: float,
+                       extra_meta: dict | None = None) -> Any:
         """Persist a value whose budget was already reserved, keeping the
-        (possibly fleet-shared) ledger honest: the reservation is credited
-        back if the write fails, or if it turns out to have overwritten an
-        entry a concurrent session already paid for."""
+        (possibly fleet-shared) ledger honest: the reservation is
+        *reconciled* to the actual on-disk size once known (the pre-save
+        host-array estimate drifts from npy/pickle reality), credited back
+        entirely if the write fails, and — when the save overwrote an
+        entry a concurrent session already paid for — the *replaced
+        entry's* recorded bytes are credited (they are what the overwrite
+        freed; crediting the new reservation instead drifts the ledger
+        whenever the sizes differ)."""
         try:
-            info = self.store.save(sig, name, value)
+            info = self.store.save(sig, name, value, extra_meta=extra_meta)
         except BaseException:
             self.materializer.release(est_bytes)
             raise
-        if info.replaced:
-            self.materializer.release(est_bytes)
+        self._settle_save(est_bytes, info)
         return info
+
+    def _settle_save(self, est_bytes: float, info) -> None:
+        """The one place for the landed-write accounting invariant:
+        reconcile the estimate-based reservation to the actual on-disk
+        size, and credit the *replaced* entry's recorded bytes when the
+        save overwrote one (sync saves and the async drain both settle
+        through here, so the ledger-drift fixes cannot diverge)."""
+        self.materializer.reconcile(est_bytes, info.nbytes)
+        if info.replaced:
+            self.materializer.credit_foreign(info.replaced_nbytes)
+
+    def _persist_value(self, sig: str, name: str, value: Any,
+                       est_bytes: float, extra_meta: dict) -> None:
+        """Hand an admitted (budget-reserved) value to the configured
+        write path: the store's writer queue under async materialization
+        (settled at the drain), else a settling synchronous save. One
+        body for the normal and eviction-admitted branches, so their
+        accounting cannot diverge."""
+        if self.async_mat:
+            self.pending_saves.append(
+                (est_bytes, self.store.save_enqueue(
+                    sig, name, value, extra_meta=extra_meta)))
+        else:
+            info = self._budgeted_save(sig, name, value, est_bytes,
+                                       extra_meta=extra_meta)
+            with self.cv:
+                self.mat_seconds += info.seconds
 
     # -- out-of-scope / materialization ------------------------------------
     def _on_actual_oos(self, name: str) -> None:
@@ -369,24 +426,50 @@ class _Scheduler:
         else:
             est_bytes = tree_nbytes(value)
             est_load = self.store.est_load_seconds(est_bytes)
+            # evict_inline=False: this runs under the scheduler lock, and
+            # eviction is store I/O (index scan + deletes) that every
+            # worker would otherwise stall behind — an over-budget
+            # "materialize" verdict comes back as needs_eviction and the
+            # evict+reserve+save runs as a deferred job below.
             decision = self.materializer.decide(
                 self.dag, name, self.states, self.runtime,
-                est_load, est_bytes, sig=self.sigs[name])
+                est_load, est_bytes, sig=self.sigs[name],
+                evict_inline=False)
+            # Cost metadata rides with the entry so fleet eviction can
+            # rank its benefit density (C(n)/l_i) later.
+            extra = {"compute_s": decision.cum_runtime,
+                     "load_s_est": est_load}
+            sig = self.sigs[name]
             if decision.materialize:
                 self.materialized[name] = decision.reason
-                sig = self.sigs[name]
-                if self.async_mat:
-                    def job(sig=sig, name=name, value=value,
-                            est=est_bytes):
-                        self.pending_saves.append(
-                            (est, self.store.save_enqueue(sig, name,
-                                                          value)))
-                else:
-                    def job(sig=sig, name=name, value=value,
-                            est=est_bytes):
-                        info = self._budgeted_save(sig, name, value, est)
+                jobs.append(lambda sig=sig, name=name, value=value,
+                            est=est_bytes, extra=extra:
+                            self._persist_value(sig, name, value, est,
+                                                extra))
+            elif decision.needs_eviction:
+                # Evict-to-admit, off the lock. With max_workers=1 the
+                # job runs immediately after this decision (sequential
+                # semantics unchanged); under parallel workers deferred
+                # admissions may interleave with later decisions — the
+                # same nondeterminism class the fleet ledger already has
+                # (budget state is shared across sessions). The decision
+                # carries the node's own benefit density as the eviction
+                # limit: mandatory outputs may evict whatever fits
+                # (None); everything else only displaces entries *less*
+                # valuable than itself.
+                def job(sig=sig, name=name, value=value, est=est_bytes,
+                        extra=extra, reason=decision.reason,
+                        limit=decision.benefit_density):
+                    if not self.materializer.try_reserve(
+                            est, benefit_density=limit):
                         with self.cv:
-                            self.mat_seconds += info.seconds
+                            self.skipped[name] = \
+                                f"{reason}; storage budget exhausted"
+                        return
+                    with self.cv:
+                        self.materialized[name] = \
+                            f"{reason} (admitted by eviction)"
+                    self._persist_value(sig, name, value, est, extra)
                 jobs.append(job)
             else:
                 self.skipped[name] = decision.reason
@@ -436,15 +519,24 @@ class _Scheduler:
                     self._on_actual_oos(name)
                 self._advance_oos_ptr_locked(jobs)
                 self.cv.notify_all()
+            # Run the whole decision batch even if one job raises: every
+            # job owns a decide-time ledger reservation that it settles
+            # itself (save, reconcile, or release-on-failure) — aborting
+            # mid-batch would strand the remaining jobs' reservations in
+            # the fleet-shared ledger permanently.
+            batch_error: BaseException | None = None
             for job in jobs:
                 try:
                     job()
                 except BaseException as e:
-                    with self.cv:
-                        if self.error is None:
-                            self.error = e
-                        self.cv.notify_all()
-                    return
+                    if batch_error is None:
+                        batch_error = e
+            if batch_error is not None:
+                with self.cv:
+                    if self.error is None:
+                        self.error = batch_error
+                    self.cv.notify_all()
+                return
 
     def run(self) -> None:
         n_workers = min(self.max_workers, max(self.n_total, 1))
@@ -463,20 +555,37 @@ class _Scheduler:
                 t.start()
             for t in threads:
                 t.join()
+        # Settle the writer queue *before* propagating any worker error:
+        # enqueued saves' reservations live in the (possibly fleet-shared)
+        # ledger and must be reconciled or released no matter how the run
+        # ended — skipping them on a worker error would leak reservations
+        # into .fleet/ledger.json permanently (shrinking every future
+        # session's budget and triggering spurious fleet-wide evictions).
+        drain_error = self._drain_pending_saves()
         if self.error is not None:
             raise self.error
-        # Drain the writer queue; its measured write time is this run's
-        # materialization overhead (satellite of §6.6 accounting). Failed
-        # or overwriting writes credit their budget reservation back.
+        if drain_error is not None:
+            raise drain_error
+
+    def _drain_pending_saves(self) -> BaseException | None:
+        """Settle every queued async save: measured write time feeds
+        ``mat_seconds`` (§6.6 accounting honesty), each landed write
+        reconciles its estimate-based reservation to the actual on-disk
+        size, and failed writes credit the reservation back. Never aborts
+        early; returns the first error instead of raising so the caller
+        can settle everything first."""
+        drain_error: BaseException | None = None
         for est, pending in self.pending_saves:
             try:
                 info = pending.result()
-            except BaseException:
+            except BaseException as e:
                 self.materializer.release(est)
-                raise
-            if info.replaced:
-                self.materializer.release(est)
+                if drain_error is None:
+                    drain_error = e
+                continue
+            self._settle_save(est, info)
             self.mat_seconds += info.seconds
+        return drain_error
 
 
 def execute(dag: DAG,

@@ -219,9 +219,24 @@ class StorageLedger:
         return ok[0]
 
     def release(self, nbytes: float) -> None:
+        """Credit ``nbytes`` back (freed by a delete/evict or an undone
+        reservation). The fleet evictor routes every eviction's freed
+        bytes through here so N concurrent sessions see one consistent
+        budget."""
+        self.adjust(-float(nbytes))
+
+    def adjust(self, delta: float) -> None:
+        """Unconditionally shift the used-bytes counter by ``delta``
+        (clamped at 0) — the one RMW primitive credits and reconciles
+        share. The top-up direction *reconciles* a reservation made from
+        a pre-save estimate with the actual on-disk size once the write
+        lands: the bytes are already on disk, so honesty beats refusal
+        even when it momentarily overshoots the budget."""
+        if delta == 0:
+            return
         update_json(self.path, lambda blob: {
             "used_bytes": max(0.0, float(blob.get("used_bytes", 0.0))
-                              - float(nbytes))}, {})
+                              + float(delta))}, {})
 
 
 class SharedEwma:

@@ -20,6 +20,7 @@ from typing import Any, Callable, Mapping
 
 from .costs import CostModel
 from .dag import State
+from .eviction import Evictor
 from .executor import ExecutionReport, execute
 from .locking import StorageLedger
 from .omp import Materializer, Policy
@@ -42,6 +43,9 @@ class IterationReport:
     sliced_away: set[str]
     store_bytes: int
     purged_bytes: int
+    # Evictor-stat deltas over this run (empty when no evictor is wired,
+    # fleet-wide deltas when the evictor is shared by a session server).
+    evictions: dict = dataclasses.field(default_factory=dict)
 
     @property
     def outputs(self) -> dict[str, Any]:
@@ -94,6 +98,17 @@ class IterativeSession:
     ``shared_budget``
         Enforce ``storage_budget_bytes`` against the store's shared
         on-disk ledger, so N concurrent sessions split one budget.
+    ``evict_to_admit``
+        When the budget is finite, attach a benefit-weighted
+        :class:`~repro.core.eviction.Evictor`: a materialization that
+        does not fit evicts the lowest-benefit-density unleased store
+        entries (C(n)/l_i × observed reuse; see eviction.py) instead of
+        being refused. Planned LOADs are pinned by read leases and never
+        evicted. Default True; False restores refuse-on-exhausted.
+    ``evictor`` / ``live_sigs``
+        Injected by the session server: one shared evictor (fleet-wide
+        stats) and the live-multiplicity veto (``sig -> bool`` — entries
+        live clients still want are never eviction candidates).
     ``purge_stale``
         The paper's §6.6 purge of prior materializations of *original*
         operators. Must be disabled for concurrent sweeps: sibling
@@ -134,7 +149,10 @@ class IterativeSession:
                  store: Store | None = None,
                  cost_model: CostModel | None = None,
                  worker_pool=None,
-                 multiplicity: Callable[[str], float] | None = None):
+                 multiplicity: Callable[[str], float] | None = None,
+                 evict_to_admit: bool = True,
+                 evictor: Evictor | None = None,
+                 live_sigs: Callable[[str], bool] | None = None):
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.store = store if store is not None \
@@ -145,11 +163,17 @@ class IterativeSession:
         if shared_budget:
             ledger = StorageLedger(self.store.ledger_path)
             ledger.ensure(float(self.store.total_bytes()))
+        self.evictor = evictor
+        if (self.evictor is None and evict_to_admit
+                and storage_budget_bytes != float("inf")):
+            self.evictor = Evictor(self.store, cost_model=self.cost_model,
+                                   live_multiplicity=live_sigs)
         self.materializer = Materializer(
             policy=policy, storage_budget_bytes=storage_budget_bytes,
             horizon=horizon, ledger=ledger,
             nondet_reusable=nondet_reusable,
-            multiplicity=multiplicity)
+            multiplicity=multiplicity,
+            evictor=self.evictor)
         if ledger is None:
             self.materializer.used_bytes = float(self.store.total_bytes())
         self.async_materialization = async_materialization
@@ -174,6 +198,8 @@ class IterativeSession:
         executor force-persists those on lease-compute)."""
         dag = workflow.build()
         sigs = compute_signatures(dag, nonces=nonces)
+        ev_before = (self.evictor.stats.snapshot()
+                     if self.evictor is not None else {})
 
         # §5.4 program slicing.
         keep = slice_from_outputs(dag)
@@ -240,7 +266,11 @@ class IterativeSession:
                     for old_sig in by_name.get(n, []):
                         if old_sig != sigs[n]:
                             purged += self.store.delete(old_sig)
-                self.materializer.release(purged)
+                # Foreign credit: the purged entries may have been paid
+                # for by a previous session — this instance never
+                # reserved those bytes, so the credit must not shrink
+                # its reserved-by-me mirror (ledger-only in fleet mode).
+                self.materializer.credit_foreign(purged)
 
             report = execute(
                 sliced, sigs, states, self.store, self.materializer,
@@ -273,7 +303,12 @@ class IterativeSession:
         self.cost_model.save()
         self.iteration += 1
 
+        evictions = {}
+        if self.evictor is not None:
+            after = self.evictor.stats.snapshot()
+            evictions = {k: after[k] - ev_before.get(k, 0) for k in after}
         return IterationReport(
             execution=report, sigs=sigs, original=original,
             sliced_away=set(dag.nodes) - keep,
-            store_bytes=self.store.total_bytes(), purged_bytes=purged)
+            store_bytes=self.store.total_bytes(), purged_bytes=purged,
+            evictions=evictions)

@@ -33,6 +33,14 @@ in one process or independent OS processes:
   holder knows someone is blocked on the result and can force-persist it.
   **Read leases** (shared mode) pin entries a session plans to LOAD;
   ``delete`` probes the lease and skips entries other sessions still need.
+* Entries carry **benefit metadata** for fleet eviction (eviction.py):
+  cost-to-recompute ``compute_s`` and load-estimate ``load_s_est`` are
+  persisted at save time (``extra_meta``), and every load bumps a
+  ``loads`` count + ``last_load`` stamp in ``meta.json``
+  (``_note_load``; mirrored to the index on power-of-two counts so the
+  hot load path never serializes on the global index lock), so ranking
+  a whole store is one index read. Overwrites carry the old entry's
+  load evidence forward.
 * Save/load wall-times feed a **merge-on-flush EWMA** bandwidth file
   (``.fleet/bw.json``) shared by all sessions — the cost model's ``l_i``
   estimates (paper §5.1: l_i = bytes / store bandwidth) improve fleet-wide
@@ -72,6 +80,12 @@ class SaveInfo:
     # paid for (e.g. two sessions raced the same signature) and should be
     # credited back.
     replaced: bool = False
+    # Recorded on-disk size of the entry this save replaced (0 when
+    # ``replaced`` is False). The bytes an overwrite frees are the *old*
+    # entry's bytes, not the new reservation — budget accounting must
+    # credit this number, or the shared ledger drifts from disk whenever
+    # the two sizes differ.
+    replaced_nbytes: int = 0
 
 
 class PendingSave:
@@ -335,6 +349,26 @@ class Store:
     def has(self, sig: str) -> bool:
         return os.path.exists(os.path.join(self._dir(sig), "meta.json"))
 
+    @staticmethod
+    def _rewrite_json(path: str, obj: dict) -> bool:
+        """Atomically replace the JSON file at ``path`` via a staged
+        sibling + ``os.replace`` (readers only ever see a whole file; a
+        failed write — ENOSPC… — leaves the original intact and cleans
+        the staging file). Returns False on failure — callers treat the
+        rewrite as best-effort."""
+        tmp = f"{path}.{os.getpid()}-{threading.get_ident()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(obj, f)
+            os.replace(tmp, path)
+            return True
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return False
+
     # -- save ------------------------------------------------------------------
     def save(self, sig: str, name: str, value: Any,
              extra_meta: dict | None = None) -> SaveInfo:
@@ -362,7 +396,35 @@ class Store:
             # (concurrent save/delete of one sig serialize here).
             with self._entry_lock(sig):
                 replaced = os.path.exists(d)
+                replaced_nbytes = 0
                 if replaced:
+                    try:
+                        with open(os.path.join(d, "meta.json")) as f:
+                            old_meta = json.load(f)
+                    except (OSError, json.JSONDecodeError):
+                        old_meta = {}
+                    try:
+                        replaced_nbytes = int(old_meta.get("nbytes", 0))
+                    except (ValueError, TypeError):
+                        replaced_nbytes = 0
+                    # Carry the observed-reuse evidence forward: an
+                    # overwrite (same signature ⇒ same value) must not
+                    # reset the entry's load count, or the fleet's
+                    # hottest entry ranks as cold for eviction right
+                    # after two sessions race a save. Best-effort and
+                    # crash-safe: the rewrite goes through a sibling
+                    # temp + os.replace, so a failed write (ENOSPC…)
+                    # leaves the already-staged meta.json whole and
+                    # only drops the carried counters.
+                    carried = {k: old_meta[k]
+                               for k in ("loads", "last_load")
+                               if k in old_meta}
+                    if carried:
+                        new_meta = dict(meta, **carried)
+                        if self._rewrite_json(os.path.join(tmp,
+                                                           "meta.json"),
+                                              new_meta):
+                            meta = new_meta
                     self._retire_dir(d)
                 os.rename(tmp, d)
                 self._index_apply(add={sig: self._index_entry(meta)})
@@ -370,7 +432,8 @@ class Store:
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
-        return SaveInfo(nbytes=nbytes, seconds=seconds, replaced=replaced)
+        return SaveInfo(nbytes=nbytes, seconds=seconds, replaced=replaced,
+                        replaced_nbytes=replaced_nbytes)
 
     def _retire_dir(self, d: str) -> None:
         """Crash-safe removal: rename the entry dir to a staging name (so
@@ -489,7 +552,9 @@ class Store:
         """
         for attempt in range(3):
             try:
-                return self._load_once(sig, sharding_for_leaf)
+                value, seconds = self._load_once(sig, sharding_for_leaf)
+                self._note_load(sig)
+                return value, seconds
             except FileNotFoundError:
                 # Raced an overwrite of the same signature (tmp dir swapped
                 # in under us). If the entry still exists, retry against the
@@ -539,6 +604,47 @@ class Store:
         seconds = time.perf_counter() - t0
         self._update_bw("read", meta["nbytes"], seconds)
         return value, seconds
+
+    def _note_load(self, sig: str) -> None:
+        """Record one observed load of ``sig`` (count + recency) in its
+        ``meta.json`` — the per-entry reuse signal fleet eviction ranks
+        against. Runs under the per-signature entry lock (same order as
+        save/delete: entry lock, then index lock) and is best-effort: a
+        concurrent delete simply wins.
+
+        The *global* index is only re-synced when the count crosses a
+        power of two: a per-load index RMW would serialize every load of
+        every session on one flock'd file — exactly the load-heavy reuse
+        path the store optimizes. O(log loads) index writes keep the
+        evictor's ranking fresh where it matters (the 0→1 transition is
+        the big protection signal; recency staleness only tie-breaks),
+        and rebuild_index heals the index from meta.json after crashes.
+
+        The entry lock is taken *non-blocking*: concurrent loaders of
+        one hot entry (K variants pulling the same shared prefix) must
+        never queue on a bookkeeping write — a contended bump is simply
+        dropped, slightly undercounting a signal that is already hot."""
+        now = time.time()
+        lock = self._entry_lock(sig)
+        if not lock.acquire(blocking=False):
+            return  # someone else is recording/publishing — skip the bump
+        try:
+            mp = os.path.join(self._dir(sig), "meta.json")
+            try:
+                with open(mp) as f:
+                    meta = json.load(f)
+            except (FileNotFoundError, NotADirectoryError,
+                    json.JSONDecodeError):
+                return  # deleted (or overwrite-in-flight) under us
+            loads = int(meta.get("loads", 0)) + 1
+            meta["loads"] = loads
+            meta["last_load"] = now
+            if not self._rewrite_json(mp, meta):
+                return
+            if loads & (loads - 1) == 0:    # 1, 2, 4, 8, …
+                self._index_apply(add={sig: self._index_entry(meta)})
+        finally:
+            lock.release()
 
     # -- compute / read leases (in-flight dedupe) --------------------------------
     def acquire_compute(self, sig: str) -> ComputeLease | None:
@@ -683,8 +789,16 @@ class Store:
     # -- on-disk index ------------------------------------------------------------
     @staticmethod
     def _index_entry(meta: dict) -> dict:
-        return {"name": meta.get("name"), "nbytes": meta.get("nbytes", 0),
-                "created": meta.get("created", 0.0)}
+        out = {"name": meta.get("name"), "nbytes": meta.get("nbytes", 0),
+               "created": meta.get("created", 0.0)}
+        # Benefit metadata for fleet eviction: cost-to-recompute C(n) and
+        # the load-cost estimate recorded at save time (see eviction.py),
+        # plus the observed load count / recency maintained by _note_load.
+        # Mirrored here so ranking a whole store is one index read.
+        for key in ("compute_s", "load_s_est", "loads", "last_load"):
+            if key in meta:
+                out[key] = meta[key]
+        return out
 
     def _index_apply(self, add: dict[str, dict] | None = None,
                      remove: list[str] | None = None) -> None:

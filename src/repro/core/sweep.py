@@ -113,6 +113,8 @@ class SweepReport:
     results: list[VariantResult]
     wall_seconds: float
     store_bytes: int
+    # Fleet evictor stats over the whole sweep (empty when eviction off).
+    evictions: dict = dataclasses.field(default_factory=dict)
 
     @property
     def outputs(self) -> dict[str, dict[str, Any]]:
@@ -187,7 +189,8 @@ def run_sweep(workdir: str,
               dedupe_wait_seconds: float = 3600.0,
               horizon: float | None = None,
               schedule: str = "prefix",
-              pool_workers: int | None = None) -> SweepReport:
+              pool_workers: int | None = None,
+              evict_to_admit: bool = True) -> SweepReport:
     """Run every variant against one shared store in ``workdir``.
 
     Spins up an in-process :class:`~repro.serve.server.SessionServer`
@@ -216,6 +219,13 @@ def run_sweep(workdir: str,
     and duplicate it — it is only the escape hatch that keeps a
     crashed-but-lease-holding-via-NFS style pathology from stalling the
     sweep forever.
+
+    ``evict_to_admit`` (default True) gives the fleet benefit-weighted
+    eviction under the shared budget: a materialization that does not
+    fit evicts the lowest-benefit unleased entries (never ones a live
+    variant still wants — the server's multiplicity map vetoes those)
+    instead of being refused. ``SweepReport.evictions`` carries the
+    fleet evictor's stats.
     """
     from ..serve.server import SessionServer  # local: avoids import cycle
 
@@ -237,7 +247,8 @@ def run_sweep(workdir: str,
         max_workers=max_workers, prefetch_depth=prefetch_depth,
         async_materialization=async_materialization,
         share_nondet=share_nondet, dedupe_inflight=dedupe_inflight,
-        dedupe_wait_seconds=dedupe_wait_seconds, horizon=horizon)
+        dedupe_wait_seconds=dedupe_wait_seconds, horizon=horizon,
+        evict_to_admit=evict_to_admit)
     t_start = time.perf_counter()
     jobs: list = []
     try:
@@ -253,6 +264,8 @@ def run_sweep(workdir: str,
     finally:
         server.shutdown()
     wall = time.perf_counter() - t_start
+    evictions = (server.evictor.stats.snapshot()
+                 if server.evictor is not None else {})
 
     results = [
         VariantResult(variant=v, report=None, seconds=0.0, error=j)
@@ -265,4 +278,4 @@ def run_sweep(workdir: str,
         if r.report is not None:
             store_bytes = max(store_bytes, r.report.store_bytes)
     return SweepReport(results=results, wall_seconds=wall,
-                       store_bytes=store_bytes)
+                       store_bytes=store_bytes, evictions=evictions)

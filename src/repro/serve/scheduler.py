@@ -76,6 +76,14 @@ class PrefixScheduler:
         """Live submissions (queued or running) that need ``sig``."""
         return self._mult.get(sig, 0)
 
+    def is_live(self, sig: str) -> bool:
+        """Eviction veto: does any live (queued or running) submission
+        still plan to use ``sig``? The server hands this to the fleet
+        evictor so entries live clients want are never candidates —
+        evicting them would force the exact recompute the store exists
+        to avoid."""
+        return self._mult.get(str(sig), 0) > 0
+
     # -- dispatch policy ---------------------------------------------------
     def shared_weight(self, job: _SchedJob, has=None) -> float:
         """Cost-weighted shared work this job would *newly* compute.

@@ -44,6 +44,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Mapping
 
 from ..core.costs import CostModel
+from ..core.eviction import Evictor
 from ..core.locking import StorageLedger
 from ..core.omp import Policy
 from ..core.session import IterationReport, IterativeSession
@@ -151,6 +152,14 @@ class SessionServer:
         reports pin workflow outputs in memory). Oldest beyond this are
         evicted; clients can also release one eagerly with the
         ``forget`` op.
+    ``evict_to_admit``
+        Attach one fleet :class:`~repro.core.eviction.Evictor` shared by
+        every hosted session: materializations that do not fit the
+        shared budget evict the lowest-benefit-density unleased entries
+        (C(n)/l_i × observed reuse), with the scheduler's live
+        multiplicity map as a hard veto — entries live clients still
+        want are never candidates. Stats surface in ``status()`` and job
+        summaries. False restores refuse-on-exhausted.
     """
 
     def __init__(self, workdir: str, *,
@@ -170,7 +179,8 @@ class SessionServer:
                  purge_stale: bool = False,
                  horizon: float | None = None,
                  poll_interval: float = 0.05,
-                 max_finished_jobs: int = 1024):
+                 max_finished_jobs: int = 1024,
+                 evict_to_admit: bool = True):
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.registry = dict(registry or {})
@@ -204,6 +214,18 @@ class SessionServer:
         self.scheduler = PrefixScheduler(self.store, self.cost_model,
                                          mode=schedule)
         self._share_view = _LiveShareView(self.scheduler)
+        # One fleet evictor shared by every hosted session (stats then
+        # aggregate server-wide). The scheduler's live multiplicity map
+        # is the veto: entries queued/running clients still want are
+        # never eviction candidates.
+        self.evict_to_admit = bool(evict_to_admit)
+        self.evictor: Evictor | None = None
+        if self.evict_to_admit and storage_budget_bytes != float("inf"):
+            # Same gate as IterativeSession: an unbounded budget can
+            # never trigger eviction, and reports should carry the
+            # documented "empty when eviction off" shape.
+            self.evictor = Evictor(self.store, cost_model=self.cost_model,
+                                   live_multiplicity=self.scheduler.is_live)
 
         self._cv = threading.Condition()
         self._jobs: dict[str, Job] = {}
@@ -317,6 +339,8 @@ class SessionServer:
                 "running": len(self._running),
                 "total_jobs": len(self._jobs),
                 "pool": self.pool.stats(),
+                "eviction": (self.evictor.stats.snapshot()
+                             if self.evictor is not None else None),
             }
         # Store I/O stays outside the dispatch lock: an index read must
         # never stall submits/completions behind a slow filesystem.
@@ -341,6 +365,11 @@ class SessionServer:
                 "total_seconds": round(ex.total_seconds, 6),
                 "mat_seconds": round(ex.mat_seconds, 6),
             }
+            if j.report.evictions:
+                # Fleet evictor-stat deltas over this job's run window
+                # (the evictor is shared, so concurrent jobs' windows
+                # overlap — these attribute fleet activity, not blame).
+                out["execution"]["evictions"] = dict(j.report.evictions)
             out["outputs"] = jsonable(j.report.outputs)
         return out
 
@@ -400,6 +429,10 @@ class SessionServer:
                 nondet_reusable=self.share_nondet,
                 store=self.store, cost_model=self.cost_model,
                 worker_pool=self.pool,
+                # One shared fleet evictor (live-multiplicity veto from
+                # the scheduler); None keeps refuse-on-exhausted.
+                evict_to_admit=self.evict_to_admit,
+                evictor=self.evictor,
                 # Observed amortization belongs to the globally-aware
                 # schedule; "fifo" keeps OMP purely static so it remains
                 # a faithful PR 2 baseline (pass horizon=K to match).
