@@ -26,6 +26,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
       refuse-on-exhausted at a budget ~50% of the sweep working set,
       store pre-squatted by stale junk; also checks ledger==disk at
       drain.
+  bench_remote_reuse        — ISSUE 5: cold-host speedup from a warm
+      remote tier (fleet-wide materialization sharing across hosts) on
+      the census grid: a 2-host sweep warms the tier (fleet compute-once
+      must hold across hosts), then a fresh "host" runs the same grid
+      against the warm tier vs. an empty one.
 
 Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list),
 HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine),
@@ -453,6 +458,92 @@ def bench_eviction() -> None:
               f"ledger_drift_refuse_b={drift['refuse']:.0f}", flush=True)
 
 
+def bench_remote_reuse() -> None:
+    """ISSUE 5: cold-host speedup from warm-remote reuse.
+
+    Three phases on the census grid:
+
+    1. **Warm** — a 2-host sweep (separate per-host workdirs, one shared
+       remote tier) warms the tier. This phase also proves the cross-host
+       protocol: ``fleet_dup`` counts shared signatures blindly computed
+       more than once *across hosts* (coordination failures — must be 0;
+       deliberate recompute-cheaper-than-load planner choices excluded,
+       see ``SweepReport.wasted_recomputes``).
+    2. **Cold host, warm remote** — a fresh workdir (nothing local) runs
+       the same grid against the warm tier: every reusable prefix is a
+       remote fetch instead of a compute.
+    3. **Cold host, empty remote** — the same fresh-workdir run against
+       an empty tier: the true cold baseline at identical concurrency.
+
+    Headline = phase-3 wall / phase-2 wall (acceptance: ≥ 1.5x).
+    ``evict_leased`` is a live probe, not a constant: after the warm
+    phase the bench pins a warm entry and attempts a remote eviction of
+    it — the count of successful deletes-under-pin is the reported
+    number (0 = the lease veto held; ``delete_entry`` must refuse).
+    ``evict_vetoed`` is the tier's veto counter over the whole run.
+    """
+    from repro.core import FsObjectStore, RemoteStore, grid, run_sweep
+
+    n_var = int(os.environ.get("HELIX_BENCH_SWEEP_VARIANTS", "4"))
+    sweep_scale = float(os.environ.get("HELIX_BENCH_SWEEP_SCALE", "1"))
+    regs = [0.03, 0.3, 0.01, 1.0, 0.1, 3.0]
+    n_regs = max(1, (n_var + 1) // 2)
+    base = W.CensusKnobs(n_rows=max(2000, int(120_000 * sweep_scale)))
+    axes = {"reg": regs[:n_regs], "eval_threshold": [0.5, 0.7]}
+    variants = grid(base, axes, W.build_census, name="census")[:n_var]
+    n_eff = len(variants)
+
+    # 1) warm the tier from a 2-host fleet (also the dedupe proof)
+    remote_root = os.path.join(ROOT, "census_remote_tier")
+    shutil.rmtree(remote_root, ignore_errors=True)
+    warm_wd = os.path.join(ROOT, "census_remote_warm")
+    shutil.rmtree(warm_wd, ignore_errors=True)
+    warm = run_sweep(warm_wd, variants, n_hosts=2, remote=remote_root)
+    warm.raise_errors()
+    fleet_dup = warm.wasted_recomputes()
+
+    # Live probe of the lease-veto invariant: pin a warm entry from a
+    # "second host" handle, then try to evict it — the reported number
+    # counts successful deletes-under-pin (must stay 0).
+    prober = RemoteStore(FsObjectStore(remote_root))
+    warm_sigs = sorted(prober.entries())
+    evict_leased = 0
+    if warm_sigs:
+        probe_sig = warm_sigs[0]
+        pin = prober.acquire_pin(probe_sig)
+        evictor_handle = RemoteStore(FsObjectStore(remote_root))
+        if evictor_handle.delete_entry(probe_sig) > 0:
+            evict_leased += 1
+        evictor_handle.close()
+        if pin is not None:
+            pin.release()
+    prober.close()
+
+    # 2) cold host, warm remote vs 3) cold host, empty remote
+    walls = {}
+    stats = {}
+    for mode, tier in (("warm", remote_root),
+                       ("empty", os.path.join(ROOT,
+                                              "census_remote_empty"))):
+        if mode == "empty":
+            shutil.rmtree(tier, ignore_errors=True)
+        workdir = os.path.join(ROOT, f"census_remote_cold_{mode}")
+        shutil.rmtree(workdir, ignore_errors=True)
+        report = run_sweep(workdir, variants, remote=tier)
+        report.raise_errors()
+        walls[mode] = report.wall_seconds
+        stats[mode] = report.remote
+    speedup = walls["empty"] / max(walls["warm"], 1e-9)
+    veto = stats["warm"].get("n_veto_protected", 0)
+    print(f"census_remote_reuse,"
+          f"{walls['warm'] * 1e6 / n_eff:.0f},"
+          f"cold_s={walls['empty']:.2f};warm_s={walls['warm']:.2f};"
+          f"variants={n_eff};speedup={speedup:.2f}x;"
+          f"fleet_dup={fleet_dup};"
+          f"remote_fetches={stats['warm'].get('n_fetches', 0)};"
+          f"evict_leased={evict_leased};evict_vetoed={veto}", flush=True)
+
+
 def bench_engine_overlap() -> None:
     """Scheduler-overlap ceiling: a wide diamond of GIL-releasing 150 ms
     wait stubs (no CPU contention). Near-width× speedup means the ready-set
@@ -498,6 +589,7 @@ def main() -> None:
     bench_sweep_reuse()
     bench_server_reuse()
     bench_eviction()
+    bench_remote_reuse()
     bench_engine_overlap()
 
 

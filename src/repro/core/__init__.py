@@ -7,7 +7,9 @@ from .signature import compute_signatures, source_version
 from .oep import plan, plan_runtime, brute_force_plan
 from .omp import Materializer, Policy, cumulative_runtime
 from .eviction import EvictionStats, Evictor
-from .store import ComputeLease, Store, tree_nbytes
+from .remote import (FsObjectStore, ObjectStore, RemoteStats, RemoteStore,
+                     as_remote_store)
+from .store import ComputeLease, ReadPin, Store, tree_nbytes
 from .locking import FileLock, SharedEwma, StorageLedger
 from .costs import CostModel
 from .executor import ExecutionReport, execute
@@ -23,7 +25,9 @@ __all__ = [
     "plan", "plan_runtime", "brute_force_plan",
     "Materializer", "Policy", "cumulative_runtime",
     "EvictionStats", "Evictor",
-    "ComputeLease", "Store", "tree_nbytes", "CostModel",
+    "FsObjectStore", "ObjectStore", "RemoteStats", "RemoteStore",
+    "as_remote_store",
+    "ComputeLease", "ReadPin", "Store", "tree_nbytes", "CostModel",
     "FileLock", "SharedEwma", "StorageLedger",
     "ExecutionReport", "execute",
     "Ref", "Workflow",

@@ -123,6 +123,15 @@ class Evictor:
                                                             default=0.0))
             if cost_s <= 0 and reuse > 0:
                 cost_s = load_s
+        remote = getattr(self.store, "remote", None)
+        if remote is not None and remote.exists(sig):
+            # Multi-tier: a remotely-committed entry is recoverable by a
+            # refetch, never a recompute — its local copy is worth at
+            # most one load no matter how expensive the original compute
+            # was. Remote-backed entries therefore yield the local cache
+            # first, which is exactly the tiering you want: the local
+            # disk holds what only it can cheaply restore.
+            cost_s = min(cost_s, load_s)
         return benefit_density(cost_s, load_s, reuse)
 
     def ranked(self) -> list[tuple[str, dict, float]]:

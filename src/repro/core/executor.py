@@ -267,6 +267,14 @@ class _Scheduler:
                 return value, secs
             lease = self.store.acquire_compute(sig)
             if lease is not None:
+                if (self.store.remote is not None
+                        and self.store.has_fresh(sig)):
+                    # Another HOST committed the entry between our
+                    # (cached) presence check and the lease acquisition
+                    # — release and loop to the load path; computing
+                    # here would break fleet-wide compute-once.
+                    lease.release()
+                    continue
                 break
             remaining = deadline - time.monotonic()
             if remaining <= 0:
@@ -329,6 +337,14 @@ class _Scheduler:
         extra = {"compute_s": c_cum, "load_s_est": est_load}
         info = self._budgeted_save(sig, name, value, est_bytes,
                                    extra_meta=extra)
+        if self.store.remote is not None:
+            # Publish-before-release: a cross-host waiter wakes the
+            # moment the remote TTL lease vanishes and has no view of
+            # this host's local tier — the async uploader alone would
+            # open a recompute window exactly where dedupe matters.
+            # Synchronous write-through here keeps compute-once exact
+            # fleet-wide; non-shared materializations stay async.
+            self.store.upload_now(sig)
         with self.cv:
             self.mat_seconds += info.seconds
             self.materialized[name] = (

@@ -138,6 +138,25 @@ class FileLock:
             return False
         return True
 
+    def probe(self) -> str:
+        """Who holds this lock right now: ``"free"``, ``"shared"``, or
+        ``"exclusive"``. Two non-blocking probes (exclusive, then
+        shared): an exclusive probe succeeds only on a free lock; a
+        shared probe coexists with shared holders but not an exclusive
+        one. Lets the store's lease census tell compute leases
+        (exclusive) from read pins (shared) without bookkeeping files.
+        Leaves the lock unheld on return; the answer is inherently a
+        snapshot."""
+        ex = FileLock(self.path)
+        if ex.acquire(blocking=False):
+            ex.release()
+            return "free"
+        sh = FileLock(self.path, shared=True)
+        if sh.acquire(blocking=False):
+            sh.release()
+            return "shared"
+        return "exclusive"
+
     def __enter__(self) -> "FileLock":
         self.acquire()
         return self

@@ -26,6 +26,7 @@ from .locking import StorageLedger
 from .omp import Materializer, Policy
 from .oep import plan
 from .pruning import slice_from_outputs
+from .remote import ObjectStore, RemoteStore, as_remote_store
 from .signature import compute_signatures
 from .store import Store
 from .workflow import Workflow
@@ -119,6 +120,15 @@ class IterativeSession:
     Server knobs (one long-running process hosting many sessions — see
     ``repro.serve``):
 
+    ``remote``
+        Attach a fleet-shared remote materialization tier (see
+        remote.py): a :class:`~repro.core.remote.RemoteStore`, a raw
+        :class:`~repro.core.remote.ObjectStore` backend, or a
+        filesystem path (the shared-mount reference deployment). The
+        local store then write-through/read-through caches it —
+        materializations upload asynchronously, local misses fetch, and
+        compute leases extend across hosts via TTL lease objects.
+        Ignored when ``store`` is injected (the store's own tier wins).
     ``store`` / ``cost_model``
         Injected shared instances. The session server opens one
         :class:`Store` (one writer queue, one heal pass, one bandwidth
@@ -146,6 +156,7 @@ class IterativeSession:
                  shared_budget: bool = False,
                  purge_stale: bool = True,
                  nondet_reusable: bool = False,
+                 remote: RemoteStore | ObjectStore | str | None = None,
                  store: Store | None = None,
                  cost_model: CostModel | None = None,
                  worker_pool=None,
@@ -156,7 +167,8 @@ class IterativeSession:
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.store = store if store is not None \
-            else Store(os.path.join(workdir, "store"))
+            else Store(os.path.join(workdir, "store"),
+                       remote=as_remote_store(remote))
         self.cost_model = cost_model if cost_model is not None \
             else CostModel(os.path.join(workdir, "costs.json"))
         ledger = None

@@ -48,6 +48,23 @@ in one process or independent OS processes:
 * ``save_enqueue`` hands a host snapshot to a dedicated **writer thread**;
   in-flight bytes are bounded by ``max_inflight_bytes``. Multi-leaf values
   are written/read with per-leaf parallel .npy I/O (shared small pool).
+* With a **remote tier** attached (``remote=``, see remote.py) the local
+  store becomes a write-through / read-through cache of a fleet-shared
+  object store: every local publish is uploaded asynchronously off a
+  dedicated uploader thread (``upload_now`` forces it synchronously —
+  the executor uses that for shared signatures so cross-host waiters
+  find the entry the moment the compute lease releases); ``has`` /
+  ``meta`` / ``load`` fall back to the remote tier on local miss, and a
+  fetched entry is published into the local tier (the populate is
+  ledger-adjusted so the fleet budget stays exact). Compute leases
+  compose: the local ``flock`` dedupes within the host, a remote TTL
+  lease object dedupes across hosts (heartbeat-renewed; expiry replaces
+  flock's crash-release), and ``wait_compute`` polls the remote lease
+  when the holder is another host. Planned-LOAD read pins extend to a
+  remote TTL pin when the entry only exists remotely, so no host's
+  remote eviction can yank another host's plan. If the remote backend
+  errors, the tier degrades to local-only for a cool-down window — the
+  host keeps working (docs/operations.md, failure modes).
 """
 from __future__ import annotations
 
@@ -68,7 +85,9 @@ import numpy as np
 
 import jax
 
-from .locking import FileLock, SharedEwma, read_json, update_json
+from .locking import (FileLock, SharedEwma, StorageLedger, read_json,
+                      update_json)
+from .remote import RemoteStore
 
 
 @dataclasses.dataclass
@@ -167,19 +186,31 @@ class ComputeLease:
     Held from just before the compute starts until the value is either
     published to the store or the holder decides not to persist it. The
     kernel releases the underlying ``flock`` if the holder crashes, so
-    waiters take over stale leases automatically.
+    waiters take over stale leases automatically. With a remote tier the
+    lease spans both scopes: the local ``flock`` excludes this host's
+    sessions, a heartbeat-renewed remote TTL lease excludes other hosts
+    (its *expiry* is the cross-host crash-release).
     """
 
-    def __init__(self, store: "Store", sig: str, lock: FileLock):
+    def __init__(self, store: "Store", sig: str, lock: FileLock,
+                 remote_lease=None):
         self._store = store
         self.sig = sig
         self._lock: FileLock | None = lock
+        self._remote_lease = remote_lease
 
     def waiters(self) -> int:
-        """How many sessions are currently blocked on this signature."""
+        """How many sessions are currently blocked on this signature
+        (this host's waiter markers plus remote hosts' TTL markers)."""
         return self._store._count_waiters(self.sig)
 
     def release(self) -> None:
+        # Remote first: a cross-host waiter that wakes on the remote
+        # lease vanishing must already be able to see the published
+        # entry (upload_now ran before release on shared paths).
+        if self._remote_lease is not None:
+            self._remote_lease.release()
+            self._remote_lease = None
         if self._lock is not None:
             self._lock.release()
             self._lock = None
@@ -189,6 +220,27 @@ class ComputeLease:
 
     def __exit__(self, *exc) -> None:
         self.release()
+
+
+class ReadPin:
+    """A held planned-LOAD pin spanning tiers.
+
+    Wraps the local shared ``flock`` (blocks this host's eviction) and,
+    when the entry only exists remotely, a remote TTL pin (blocks every
+    host's remote eviction until the load lands)."""
+
+    def __init__(self, lock: FileLock, remote_pin=None):
+        self._lock: FileLock | None = lock
+        self._remote_pin = remote_pin
+
+    def release(self) -> None:
+        """Drop both pins (idempotent)."""
+        if self._remote_pin is not None:
+            self._remote_pin.release()
+            self._remote_pin = None
+        if self._lock is not None:
+            self._lock.release()
+            self._lock = None
 
 
 # Workdir roots this process has already healed (scan + index rebuild +
@@ -203,12 +255,16 @@ class Store:
     _tmp_counter = itertools.count()
 
     def __init__(self, root: str, max_inflight_bytes: int = 1 << 30,
-                 heal: bool | None = None):
+                 heal: bool | None = None,
+                 remote: RemoteStore | None = None):
         """``heal`` controls the open-time crash recovery (stale-staging
         reap, fleet-metadata reap, index rebuild from a directory scan):
         None (default) runs it on the first open of this root in this
-        process only; True forces it; False skips it."""
+        process only; True forces it; False skips it. ``remote`` attaches
+        a fleet-shared :class:`~repro.core.remote.RemoteStore` tier the
+        local store write-through/read-through caches (see remote.py)."""
         self.root = root
+        self.remote = remote
         os.makedirs(root, exist_ok=True)
         os.makedirs(self._fleet_dir("locks"), exist_ok=True)
         os.makedirs(self._fleet_dir("leases"), exist_ok=True)
@@ -225,6 +281,13 @@ class Store:
         self._writer_queue: deque = deque()
         self._writer_thread: threading.Thread | None = None
         self._inflight_bytes = 0
+        # dedicated remote uploader (write-through off the critical path)
+        self._upload_cv = threading.Condition()
+        self._upload_queue: deque = deque()
+        self._upload_thread: threading.Thread | None = None
+        self._uploads_inflight = 0
+        # local loads served by a remote fetch (read-through populates)
+        self.remote_hits = 0
         if heal:
             self._reap_stale_tmp()
             self._reap_fleet_metadata()
@@ -311,12 +374,14 @@ class Store:
                     continue
                 # Cold (no one can be mid-save) and entry-less: reap
                 # under the exclusive lock so no live holder is split.
-                if age <= self._TMP_ORPHAN_SECONDS or self.has(sig):
+                # Local-tier check only: lock/lease files guard local
+                # publishes; a remote-only entry needs no local lock.
+                if age <= self._TMP_ORPHAN_SECONDS or self.has_local(sig):
                     continue
                 guard = FileLock(path)
                 if guard.acquire(blocking=False):
                     try:
-                        if not self.has(sig):
+                        if not self.has_local(sig):
                             try:
                                 os.unlink(path)
                             except OSError:
@@ -346,8 +411,32 @@ class Store:
     def index_path(self) -> str:
         return self._fleet_dir("index.json")
 
-    def has(self, sig: str) -> bool:
+    def has_local(self, sig: str) -> bool:
+        """Entry present in the local tier (one stat)."""
         return os.path.exists(os.path.join(self._dir(sig), "meta.json"))
+
+    def has(self, sig: str) -> bool:
+        """Entry reachable: local, or committed in the remote tier (the
+        planner's reuse test — a remote-only entry is loadable through
+        the read-through fetch path). Remote presence may be cached a
+        couple of seconds; dedupe-critical paths use :meth:`has_fresh`."""
+        if self.has_local(sig):
+            return True
+        return self.remote is not None and self.remote.exists(sig)
+
+    def has_fresh(self, sig: str) -> bool:
+        """Presence check that bypasses the remote marker cache.
+
+        The executor calls this *after acquiring a compute lease*: a
+        stale cached negative there would recompute a value another host
+        committed moments ago — the lease acquisition is the natural
+        point to pay one uncached probe for exact fleet-wide
+        compute-once. (Also refreshes the cache, so the caller's
+        follow-up ``has``/``load`` sees the entry.)"""
+        if self.has_local(sig):
+            return True
+        return (self.remote is not None
+                and self.remote.marker_meta(sig, fresh=True) is not None)
 
     @staticmethod
     def _rewrite_json(path: str, obj: dict) -> bool:
@@ -432,6 +521,12 @@ class Store:
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
+        # Write-through: hand the published entry to the uploader (async
+        # — off both the caller and the writer queue's drain path; after
+        # the try so a queueing hiccup can't mis-report a landed save).
+        # Shared-signature saves additionally upload_now() before their
+        # compute lease releases (executor).
+        self._enqueue_upload(sig, meta)
         return SaveInfo(nbytes=nbytes, seconds=seconds, replaced=replaced,
                         replaced_nbytes=replaced_nbytes)
 
@@ -534,10 +629,120 @@ class Store:
         return self.save_enqueue(sig, name, value, extra_meta=extra_meta)
 
     def writer_drain(self) -> None:
-        """Block until every queued write has been persisted."""
+        """Block until every queued write has been persisted — and, with
+        a remote tier, until every queued upload has settled too (writes
+        enqueue their own uploads, so draining one without the other
+        would leave the write-through half-done)."""
         with self._writer_cv:
             while self._writer_queue or self._inflight_bytes > 0:
                 self._writer_cv.wait()
+        self.remote_drain()
+
+    # -- remote tier (write-through / read-through) ------------------------
+    def _enqueue_upload(self, sig: str, meta: dict) -> None:
+        """Queue one published entry for async upload to the remote
+        tier (no-op without one, or while it is degraded)."""
+        if self.remote is None or not self.remote.available():
+            return
+        with self._upload_cv:
+            self._upload_queue.append((sig, meta))
+            self._uploads_inflight += 1
+            if self._upload_thread is None \
+                    or not self._upload_thread.is_alive():
+                self._upload_thread = threading.Thread(
+                    target=self._upload_loop, name="store-uploader",
+                    daemon=True)
+                self._upload_thread.start()
+            self._upload_cv.notify_all()
+
+    def _upload_loop(self) -> None:
+        while True:
+            with self._upload_cv:
+                if not self._upload_queue:
+                    # Exit when idle; _enqueue_upload restarts on demand.
+                    self._upload_thread = None
+                    return
+                sig, meta = self._upload_queue.popleft()
+            try:
+                self.remote.upload(sig, self._dir(sig), meta)
+            except BaseException:
+                pass   # upload is best-effort; degradation is handled
+            with self._upload_cv:
+                self._uploads_inflight -= 1
+                self._upload_cv.notify_all()
+
+    def upload_now(self, sig: str) -> bool:
+        """Synchronously write-through one published entry.
+
+        The executor calls this for shared signatures *before* releasing
+        the compute lease, so a cross-host waiter that wakes on the
+        lease vanishing finds the entry committed — the async uploader
+        alone would open a recompute window. Idempotent (a committed
+        entry is skipped); False without a remote tier, on local miss,
+        or when the upload was refused/degraded."""
+        if self.remote is None:
+            return False
+        try:
+            with open(os.path.join(self._dir(sig), "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return False
+        with self._upload_cv:
+            # The save that published this entry already queued an async
+            # upload; cancel it so the entry's bytes don't cross the
+            # wire twice (the queue copy would pass the marker check
+            # whenever it starts before this synchronous one commits).
+            kept = deque(item for item in self._upload_queue
+                         if item[0] != sig)
+            dropped = len(self._upload_queue) - len(kept)
+            if dropped:
+                self._upload_queue = kept
+                self._uploads_inflight -= dropped
+                self._upload_cv.notify_all()
+        return self.remote.upload(sig, self._dir(sig), meta)
+
+    def remote_drain(self) -> None:
+        """Block until the upload queue is empty (no-op without a
+        remote tier)."""
+        if self.remote is None:
+            return
+        with self._upload_cv:
+            while self._upload_queue or self._uploads_inflight > 0:
+                self._upload_cv.wait()
+
+    def _fetch_remote(self, sig: str) -> bool:
+        """Read-through: fetch ``sig`` from the remote tier and publish
+        it into the local tier. Returns False when the entry is absent
+        remotely (or the tier is degraded). The populate is accounted:
+        when a fleet budget ledger exists, the entry's bytes are
+        adjusted in — nobody reserved them, but they are on disk, and
+        the ledger==disk invariant outranks momentary overshoot (the
+        next admission's evict-to-fit sees honest occupancy)."""
+        if self.remote is None:
+            return False
+        d = self._dir(sig)
+        tmp = (f"{d}.tmp-{os.getpid()}-{threading.get_ident()}"
+               f"-{next(self._tmp_counter)}")
+        meta = self.remote.fetch(sig, tmp)
+        if meta is None:
+            shutil.rmtree(tmp, ignore_errors=True)
+            return False
+        published = False
+        with self._entry_lock(sig):
+            if os.path.exists(d):
+                # A sibling's fetch (or save) published first — ours is
+                # redundant, theirs is equivalent (same signature).
+                shutil.rmtree(tmp, ignore_errors=True)
+            else:
+                os.rename(tmp, d)
+                self._index_apply(add={sig: self._index_entry(meta)})
+                published = True
+        if published:
+            self.remote_hits += 1
+            nbytes = int(meta.get("nbytes", 0) or 0)
+            if nbytes and os.path.exists(self.ledger_path):
+                StorageLedger(self.ledger_path).adjust(float(nbytes))
+        return True
 
     # -- load ------------------------------------------------------------------
     def load(self, sig: str,
@@ -549,17 +754,29 @@ class Store:
         ``jax.sharding.Sharding`` to place array leaf ``i`` directly onto the
         current mesh (possibly different from the one it was saved under);
         ``None`` leaves it as a host numpy array.
+
+        With a remote tier, a local miss falls back to a read-through
+        fetch (the entry is published locally, then loaded); the fetch
+        wall-time is included in the returned seconds so realized
+        per-node runtimes stay honest.
         """
-        for attempt in range(3):
+        fetch_secs = 0.0
+        for attempt in range(4):
             try:
                 value, seconds = self._load_once(sig, sharding_for_leaf)
                 self._note_load(sig)
-                return value, seconds
+                return value, seconds + fetch_secs
             except FileNotFoundError:
-                # Raced an overwrite of the same signature (tmp dir swapped
-                # in under us). If the entry still exists, retry against the
-                # fresh copy; otherwise it is genuinely gone.
-                if attempt == 2 or not self.has(sig):
+                # Either we raced an overwrite of the same signature (tmp
+                # dir swapped in under us — retry against the fresh copy)
+                # or the entry was never local (remote tier fallback).
+                if self.remote is not None and not self.has_local(sig):
+                    t0 = time.perf_counter()
+                    fetched = self._fetch_remote(sig)
+                    fetch_secs += time.perf_counter() - t0
+                    if fetched:
+                        continue
+                if attempt == 3 or not self.has(sig):
                     raise
         raise AssertionError("unreachable")
 
@@ -652,11 +869,22 @@ class Store:
 
         Returns a :class:`ComputeLease` when this caller should compute the
         value, or ``None`` when another session currently holds the lease
-        (→ ``wait_compute`` and then load-or-retry)."""
+        (→ ``wait_compute`` and then load-or-retry). With a remote tier
+        the lease is two-scope: local ``flock`` first (host-internal
+        dedupe), then the remote TTL lease object (cross-host dedupe).
+        A degraded remote tier is skipped — the host proceeds local-only,
+        risking at worst one duplicate compute per signature fleet-wide."""
         lock = FileLock(self._lease_path(sig))
-        if lock.acquire(blocking=False):
-            return ComputeLease(self, sig, lock)
-        return None
+        if not lock.acquire(blocking=False):
+            return None
+        remote_lease = None
+        if self.remote is not None and self.remote.available():
+            remote_lease = self.remote.acquire_compute(sig)
+            if remote_lease is None and self.remote.available():
+                # A live holder on another host — not a degradation.
+                lock.release()
+                return None
+        return ComputeLease(self, sig, lock, remote_lease=remote_lease)
 
     def wait_compute(self, sig: str, timeout: float | None = None) -> bool:
         """Block until the current compute lease on ``sig`` is released.
@@ -665,22 +893,73 @@ class Store:
         result is wanted fleet-wide and force-persists it before releasing.
         Returns False on timeout (the caller should fall back to computing
         the value itself — bounded waits keep the fleet deadlock-free even
-        under pathological cross-session lease chains)."""
+        under pathological cross-session lease chains).
+
+        With a remote tier, the holder may be on another host: the local
+        ``flock`` is then uncontended and the wait continues by polling
+        the remote TTL lease (with a remote waiter marker registered so
+        the holder publishes before releasing)."""
+        deadline = None if timeout is None \
+            else time.monotonic() + float(timeout)
         marker = os.path.join(self._fleet_dir("leases"),
                               f"{sig}.w-{uuid.uuid4().hex}")
+        remote_waiter = None
         try:
             with open(marker, "w") as f:
                 f.write(str(os.getpid()))
+            if self.remote is not None and self.remote.available():
+                # Mirror the local protocol: register BEFORE waiting, so
+                # a cross-host holder sees this waiter at its
+                # post-compute persist decision (registering only once
+                # the remote poll starts would lose the race against
+                # fast nodes).
+                remote_waiter = self.remote.register_waiter(sig)
             waiter = FileLock(self._lease_path(sig), shared=True)
-            if waiter.acquire(timeout=timeout):
-                waiter.release()
+            if not waiter.acquire(timeout=timeout):
+                return False
+            waiter.release()
+            if self.remote is None:
                 return True
-            return False
+            return self._wait_remote(sig, deadline)
         finally:
+            if remote_waiter is not None:
+                remote_waiter.release()
             try:
                 os.unlink(marker)
             except OSError:
                 pass
+
+    def _wait_remote(self, sig: str, deadline: float | None) -> bool:
+        """Poll a cross-host compute lease until it releases/expires, the
+        entry appears, or the deadline passes (False). The caller
+        (``wait_compute``) holds a remote TTL waiter marker for the
+        duration, so the remote holder knows to force-persist. Probes
+        bypass the marker cache — a stale negative here would send the
+        caller straight into a duplicate compute."""
+        remote = self.remote
+        if remote is None or not remote.available():
+            return True   # degraded: behave local-only
+        interval = 0.05
+        while True:
+            if self.has_local(sig):
+                return True
+            # Fresh marker probe BEFORE the lease probe: a holder
+            # commits then releases, so observing "no lease" with a
+            # stale cached negative marker would send the caller into a
+            # recompute of a committed entry. Probing the marker first
+            # (and thereby refreshing the cache) closes that window.
+            if remote.marker_meta(sig, fresh=True) is not None:
+                return True
+            if not remote.lease_live(sig):
+                return True
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            sleep = interval
+            if deadline is not None:
+                sleep = min(sleep,
+                            max(deadline - time.monotonic(), 0.01))
+            time.sleep(sleep)
+            interval = min(interval * 1.6, 1.0)
 
     @staticmethod
     def _waiter_is_dead(path: str) -> bool:
@@ -723,6 +1002,8 @@ class Store:
                     pass
                 continue
             n += 1
+        if self.remote is not None:
+            n += self.remote.count_waiters(sig)
         return n
 
     def any_live_lease(self) -> bool:
@@ -741,19 +1022,39 @@ class Store:
                 return True
         return False
 
-    def acquire_read(self, sig: str) -> FileLock | None:
+    def acquire_read(self, sig: str) -> ReadPin | FileLock | None:
         """Pin ``sig`` against eviction (shared lease; see ``delete``).
         Non-blocking: returns None when the signature is being computed
-        right now (then there is nothing on disk to pin yet anyway)."""
+        right now (then there is nothing on disk to pin yet anyway).
+
+        When the entry exists only in the remote tier (a planned LOAD
+        that will fetch), the pin extends to a remote TTL pin so no
+        other host's remote eviction can delete the entry between this
+        host's plan and its load."""
         lock = FileLock(self._lease_path(sig), shared=True)
-        if lock.acquire(blocking=False):
+        if not lock.acquire(blocking=False):
+            return None
+        if self.remote is None:
             return lock
-        return None
+        remote_pin = None
+        if not self.has_local(sig) and self.remote.exists(sig):
+            remote_pin = self.remote.acquire_pin(sig)
+        return ReadPin(lock, remote_pin)
 
     # -- metadata / management ---------------------------------------------------
     def meta(self, sig: str) -> dict:
-        with open(os.path.join(self._dir(sig), "meta.json")) as f:
-            return json.load(f)
+        """Entry metadata: local ``meta.json``, else the remote commit
+        marker (which carries name/nbytes/benefit stats — enough for the
+        planner's load-cost estimate on a not-yet-fetched entry)."""
+        try:
+            with open(os.path.join(self._dir(sig), "meta.json")) as f:
+                return json.load(f)
+        except (FileNotFoundError, NotADirectoryError):
+            if self.remote is not None:
+                marker = self.remote.marker_meta(sig)
+                if marker is not None:
+                    return marker
+            raise
 
     def delete(self, sig: str, respect_leases: bool = True) -> int:
         """Remove an entry; returns bytes freed (0 if absent or leased).
@@ -858,7 +1159,64 @@ class Store:
         return by
 
     def total_bytes(self) -> int:
+        """Local-tier on-disk bytes (the number the fleet ledger mirrors;
+        the remote tier accounts its own — see ``tier_status``)."""
         return sum(m.get("nbytes", 0) for m in self.entries().values())
+
+    def lease_counts(self) -> dict:
+        """Live local-tier lease census: ``{"compute", "pins",
+        "waiters"}``. Each ``.lease`` file's flock is probed (exclusive
+        holder = a compute lease, shared holders = read pins); waiter
+        markers are counted live-only. A snapshot for observability
+        (``SessionServer.status()`` / docs/operations.md) — not a
+        synchronization primitive."""
+        out = {"compute": 0, "pins": 0, "waiters": 0}
+        try:
+            names = os.listdir(self._fleet_dir("leases"))
+        except FileNotFoundError:
+            return out
+        for name in names:
+            path = os.path.join(self._fleet_dir("leases"), name)
+            if ".w-" in name:
+                if not self._waiter_is_dead(path):
+                    out["waiters"] += 1
+                continue
+            if not name.endswith(".lease"):
+                continue
+            state = FileLock(path).probe()
+            if state == "exclusive":
+                out["compute"] += 1
+            elif state == "shared":
+                out["pins"] += 1
+        return out
+
+    def tier_status(self) -> dict:
+        """Per-tier observability snapshot: used bytes, entry counts,
+        and live lease counts for the local tier and (when attached) the
+        remote tier — the numbers the operations guide's troubleshooting
+        table points at. ``remote`` is None without a tier."""
+        entries = self.entries()
+        status: dict = {
+            "local": {
+                "bytes": sum(int(m.get("nbytes", 0) or 0)
+                             for m in entries.values()),
+                "entries": len(entries),
+                "leases": self.lease_counts(),
+                "remote_hits": self.remote_hits,
+            },
+            "remote": None,
+        }
+        if self.remote is not None:
+            remote_entries = self.remote.entries()
+            status["remote"] = {
+                "available": self.remote.available(),
+                "bytes": sum(int(m.get("nbytes", 0) or 0)
+                             for m in remote_entries.values()),
+                "entries": len(remote_entries),
+                "leases": self.remote.lease_counts(),
+                **self.remote.stats.snapshot(),
+            }
+        return status
 
     # -- bandwidth model (feeds l_i estimates) ------------------------------------
     def _update_bw(self, key: str, nbytes: int, seconds: float) -> None:

@@ -35,11 +35,26 @@ Concurrency is thread-based (JAX is fork-hostile); the store machinery
 underneath is ``flock``-based, so independent OS processes pointed at the
 same workdir compose the same way — this driver is just the convenient
 in-process harness.
+
+**Multi-host mode** (``n_hosts > 1``): the K submissions are spread
+round-robin over M session servers, each owning its *own* workdir-local
+store — the deployment shape of one server per host. With ``remote`` set
+(a shared object-store tier, see remote.py) the hosts share
+materializations through it: cross-host in-flight dedupe via TTL lease
+objects, write-through uploads, read-through fetches. Without ``remote``
+the hosts fall back to sharing one workdir (the PR 2 N-process path —
+only meaningful when ``workdir`` is a shared filesystem). In-process
+"hosts" are a faithful harness for the real thing because nothing they
+share goes through process memory except the ObjectStore handle, which
+is itself just files.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
+import math
+import os
 import time
 from typing import Any, Callable, Mapping, Sequence
 
@@ -113,8 +128,12 @@ class SweepReport:
     results: list[VariantResult]
     wall_seconds: float
     store_bytes: int
-    # Fleet evictor stats over the whole sweep (empty when eviction off).
+    # Fleet evictor stats over the whole sweep (empty when eviction off;
+    # summed across hosts in multi-host mode).
     evictions: dict = dataclasses.field(default_factory=dict)
+    # Remote-tier stats (uploads/fetches/evictions/vetoes — see
+    # remote.RemoteStats), summed across hosts; empty without a tier.
+    remote: dict = dataclasses.field(default_factory=dict)
 
     @property
     def outputs(self) -> dict[str, dict[str, Any]]:
@@ -190,7 +209,9 @@ def run_sweep(workdir: str,
               horizon: float | None = None,
               schedule: str = "prefix",
               pool_workers: int | None = None,
-              evict_to_admit: bool = True) -> SweepReport:
+              evict_to_admit: bool = True,
+              n_hosts: int = 1,
+              remote: Any = None) -> SweepReport:
     """Run every variant against one shared store in ``workdir``.
 
     Spins up an in-process :class:`~repro.serve.server.SessionServer`
@@ -226,8 +247,18 @@ def run_sweep(workdir: str,
     variant still wants — the server's multiplicity map vetoes those)
     instead of being refused. ``SweepReport.evictions`` carries the
     fleet evictor's stats.
+
+    ``n_hosts`` > 1 turns on multi-host mode (module docstring): the
+    submissions spread round-robin over that many session servers, each
+    with its own local store under ``workdir/host<i>`` — sharing work
+    through the ``remote`` tier when one is given (a
+    :class:`~repro.core.remote.RemoteStore`, an ObjectStore backend, or
+    a filesystem path), else through one common ``workdir``. Session
+    slots split evenly across hosts. ``remote`` also works with a
+    single host (write-through warm-up of a fleet tier).
     """
-    from ..serve.server import SessionServer  # local: avoids import cycle
+    from ..serve.server import (SessionServer,     # local: avoids
+                                SharedNonces)      # an import cycle
 
     variants = list(variants)
     if not variants:
@@ -239,33 +270,86 @@ def run_sweep(workdir: str,
         # multiplicity (the server already withholds it in fifo mode),
         # and PR 2's static horizon≈K amortization default.
         horizon = float(len(variants))
+    n_hosts = max(1, min(int(n_hosts), len(variants)))
+    slots_per_host = max(1, math.ceil(n_concurrent / n_hosts))
+    # One nonce map for the whole fleet: nondeterministic operators stay
+    # sweep-equivalent across hosts, exactly as within one server.
+    fleet_nonces = SharedNonces() if share_nondet and n_hosts > 1 \
+        else None
 
-    server = SessionServer(
-        workdir, n_sessions=n_concurrent, pool_workers=pool_workers,
-        schedule=schedule, policy=policy,
-        storage_budget_bytes=storage_budget_bytes,
-        max_workers=max_workers, prefetch_depth=prefetch_depth,
-        async_materialization=async_materialization,
-        share_nondet=share_nondet, dedupe_inflight=dedupe_inflight,
-        dedupe_wait_seconds=dedupe_wait_seconds, horizon=horizon,
-        evict_to_admit=evict_to_admit)
+    servers = [
+        SessionServer(
+            # Per-host workdirs only when a remote tier connects them;
+            # without one, "hosts" share the workdir itself (the PR 2
+            # N-process path) — private workdirs with no tier would
+            # silently lose all cross-host reuse.
+            workdir if n_hosts == 1 or remote is None
+            else os.path.join(workdir, f"host{h}"),
+            n_sessions=slots_per_host, pool_workers=pool_workers,
+            schedule=schedule, policy=policy,
+            storage_budget_bytes=storage_budget_bytes,
+            max_workers=max_workers, prefetch_depth=prefetch_depth,
+            async_materialization=async_materialization,
+            share_nondet=share_nondet, dedupe_inflight=dedupe_inflight,
+            dedupe_wait_seconds=dedupe_wait_seconds, horizon=horizon,
+            evict_to_admit=evict_to_admit, remote=remote,
+            nonces=fleet_nonces)
+        for h in range(n_hosts)]
     t_start = time.perf_counter()
     jobs: list = []
     try:
-        # One held batch: every variant's signatures enter the multiplicity
-        # map before the first dispatch decision is made.
-        with server.hold_dispatch():
-            for v in variants:
+        # One held batch per server: every variant's signatures enter
+        # each host's multiplicity map before its first dispatch
+        # decision. (Multiplicity maps are per-host; cross-host sharing
+        # flows through the remote tier's leases, not the scheduler.)
+        with contextlib.ExitStack() as stack:
+            for server in servers:
+                stack.enter_context(server.hold_dispatch())
+            for i, v in enumerate(variants):
                 try:
-                    jobs.append(server.submit(v.build, name=v.name))
+                    jobs.append(servers[i % n_hosts].submit(v.build,
+                                                            name=v.name))
                 except BaseException as e:  # a broken factory is one arm's
                     jobs.append(e)          # failure, not the sweep's
-        server.wait_all([j for j in jobs if not isinstance(j, BaseException)])
+            if n_hosts > 1:
+                # Cross-host share set: a signature two *hosts* need
+                # must be force-persisted (and uploaded before the
+                # lease releases) by whichever host computes it — each
+                # server's own multiplicity map only sees its local
+                # arms, so without this a one-arm-per-host fleet would
+                # persist nothing and every host would recompute the
+                # common prefix.
+                per_host: list[set] = [set() for _ in servers]
+                for i, j in enumerate(jobs):
+                    if not isinstance(j, BaseException):
+                        per_host[i % n_hosts] |= set(j.sigs)
+                counts: dict[str, int] = {}
+                for sigs in per_host:
+                    for sig in sigs:
+                        counts[sig] = counts.get(sig, 0) + 1
+                fleet_shared = {s for s, c in counts.items() if c >= 2}
+                for server in servers:
+                    server.share_across(fleet_shared)
+        for h, server in enumerate(servers):
+            server.wait_all([j for i, j in enumerate(jobs)
+                             if i % n_hosts == h
+                             and not isinstance(j, BaseException)])
     finally:
-        server.shutdown()
+        for server in servers:
+            server.shutdown()
     wall = time.perf_counter() - t_start
-    evictions = (server.evictor.stats.snapshot()
-                 if server.evictor is not None else {})
+    evictions: dict = {}
+    remote_stats: dict = {}
+    seen_remotes: set[int] = set()
+    for server in servers:
+        if server.evictor is not None:
+            for k, n in server.evictor.stats.snapshot().items():
+                evictions[k] = evictions.get(k, 0) + n
+        tier = server.store.remote
+        if tier is not None and id(tier) not in seen_remotes:
+            seen_remotes.add(id(tier))   # a shared injected instance
+            for k, n in tier.stats.snapshot().items():  # counts once
+                remote_stats[k] = remote_stats.get(k, 0) + n
 
     results = [
         VariantResult(variant=v, report=None, seconds=0.0, error=j)
@@ -278,4 +362,5 @@ def run_sweep(workdir: str,
         if r.report is not None:
             store_bytes = max(store_bytes, r.report.store_bytes)
     return SweepReport(results=results, wall_seconds=wall,
-                       store_bytes=store_bytes, evictions=evictions)
+                       store_bytes=store_bytes, evictions=evictions,
+                       remote=remote_stats)

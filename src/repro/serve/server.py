@@ -47,6 +47,7 @@ from ..core.costs import CostModel
 from ..core.eviction import Evictor
 from ..core.locking import StorageLedger
 from ..core.omp import Policy
+from ..core.remote import ObjectStore, RemoteStore, as_remote_store
 from ..core.session import IterationReport, IterativeSession
 from ..core.signature import compute_signatures
 from ..core.store import Store
@@ -84,13 +85,20 @@ class _LiveShareView:
     The executor force-persists lease-computed values whose signature is
     ``in`` this set; backing it by the live map (instead of a frozen
     pre-pass snapshot) means a client that arrives *mid-computation* of a
-    prefix still gets it persisted."""
+    prefix still gets it persisted. ``extra`` is the server's
+    cross-host share set (:meth:`SessionServer.share_across`): the
+    multiplicity map only sees *this host's* submissions, so a
+    multi-host driver must say which signatures sibling hosts also want
+    — otherwise a host running one arm would persist nothing for the
+    fleet and every other host would recompute its prefix."""
 
-    def __init__(self, scheduler: PrefixScheduler):
+    def __init__(self, scheduler: PrefixScheduler, extra: set):
         self._scheduler = scheduler
+        self._extra = extra
 
     def __contains__(self, sig: object) -> bool:
-        return self._scheduler.multiplicity(str(sig)) >= 2
+        return (self._scheduler.multiplicity(str(sig)) >= 2
+                or str(sig) in self._extra)
 
 
 @dataclasses.dataclass
@@ -141,6 +149,11 @@ class SessionServer:
     ``share_nondet``
         Pin one nonce map server-wide so identical nondeterministic
         operators are shared across clients (see :class:`SharedNonces`).
+    ``nonces``
+        Inject a :class:`SharedNonces` instance instead of creating one
+        — the multi-host sweep passes one map to all its servers so
+        nondeterministic operators stay sweep-equivalent *across*
+        hosts.
     ``horizon``
         Static amortization floor forwarded to OMP. ``None`` (default)
         means 1.0 — under ``schedule="prefix"`` the live multiplicity map
@@ -159,7 +172,19 @@ class SessionServer:
         (C(n)/l_i × observed reuse), with the scheduler's live
         multiplicity map as a hard veto — entries live clients still
         want are never candidates. Stats surface in ``status()`` and job
-        summaries. False restores refuse-on-exhausted.
+        summaries. False restores refuse-on-exhausted. This governs the
+        *local* cache tier; the remote tier budgets itself (below).
+    ``remote``
+        Attach the fleet-shared remote materialization tier (remote.py):
+        a :class:`~repro.core.remote.RemoteStore`, an
+        :class:`~repro.core.remote.ObjectStore` backend, or a filesystem
+        path (shared-mount reference deployment). The deployment shape
+        is one server per host, N servers per remote tier: each server's
+        local store write-through/read-through caches the shared tier,
+        compute leases extend across hosts via TTL lease objects, and
+        ``status()`` reports both tiers. A server that *constructed* its
+        RemoteStore (str/ObjectStore input) closes it on shutdown; an
+        injected instance belongs to the caller.
     """
 
     def __init__(self, workdir: str, *,
@@ -180,7 +205,9 @@ class SessionServer:
                  horizon: float | None = None,
                  poll_interval: float = 0.05,
                  max_finished_jobs: int = 1024,
-                 evict_to_admit: bool = True):
+                 evict_to_admit: bool = True,
+                 remote: RemoteStore | ObjectStore | str | None = None,
+                 nonces: SharedNonces | None = None):
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.registry = dict(registry or {})
@@ -201,7 +228,9 @@ class SessionServer:
         # this server hosts. Reconcile the shared budget ledger with disk
         # unless another process's fleet is mid-run on this workdir (its
         # live reservations must not be erased).
-        self.store = Store(os.path.join(workdir, "store"))
+        self._owns_remote = not isinstance(remote, RemoteStore)
+        self.store = Store(os.path.join(workdir, "store"),
+                           remote=as_remote_store(remote))
         self.cost_model = CostModel(os.path.join(workdir, "costs.json"))
         if not self.store.any_live_lease():
             StorageLedger(self.store.ledger_path).reset(
@@ -210,10 +239,16 @@ class SessionServer:
             pool_workers if pool_workers is not None
             else max(self.n_sessions, self.max_workers))
         self.nonces: SharedNonces | None = \
-            SharedNonces() if share_nondet else None
+            nonces if nonces is not None \
+            else (SharedNonces() if share_nondet else None)
         self.scheduler = PrefixScheduler(self.store, self.cost_model,
                                          mode=schedule)
-        self._share_view = _LiveShareView(self.scheduler)
+        # Signatures sibling *hosts* also want (multi-host drivers feed
+        # this via share_across; the live multiplicity map below only
+        # covers this host's own submissions).
+        self.share_extra: set[str] = set()
+        self._share_view = _LiveShareView(self.scheduler,
+                                          self.share_extra)
         # One fleet evictor shared by every hosted session (stats then
         # aggregate server-wide). The scheduler's live multiplicity map
         # is the veto: entries queued/running clients still want are
@@ -290,6 +325,18 @@ class SessionServer:
         wf = factory(**dict(params or {}))
         return self.submit(wf, name=name or workflow)
 
+    def share_across(self, sigs) -> None:
+        """Mark signatures sibling *hosts* also need (multi-host mode).
+
+        The executor then force-persists them on lease-compute and
+        uploads synchronously before the lease releases — without this,
+        a host whose own submissions share nothing would persist nothing
+        and every other host would recompute the common prefix. The
+        multi-host ``run_sweep`` computes the cross-host shared set from
+        the submitted jobs' signatures and feeds it here."""
+        with self._cv:
+            self.share_extra.update(str(s) for s in sigs)
+
     @contextlib.contextmanager
     def hold_dispatch(self):
         """Pause dispatching while a batch is submitted, so the scheduler
@@ -344,7 +391,12 @@ class SessionServer:
             }
         # Store I/O stays outside the dispatch lock: an index read must
         # never stall submits/completions behind a slow filesystem.
-        snapshot["store_bytes"] = self.store.total_bytes()
+        # Per-tier report (used bytes, entry counts, live lease census
+        # for local AND remote) — the observability surface the
+        # operations guide's troubleshooting table points at;
+        # ``store_bytes`` (local tier) is kept for older clients.
+        snapshot["tiers"] = self.store.tier_status()
+        snapshot["store_bytes"] = snapshot["tiers"]["local"]["bytes"]
         return snapshot
 
     def job_summary(self, job: Job | str) -> dict:
@@ -528,6 +580,13 @@ class SessionServer:
             self._cv.notify_all()
         self._dispatcher.join(timeout=30.0)
         self._job_pool.shutdown(wait=True)
+        # Settle the write-through: queued uploads must land before the
+        # remote handle (and its lease heartbeat) goes away, or a warm
+        # remote tier silently misses this host's last materializations.
+        if self.store.remote is not None:
+            self.store.writer_drain()
+            if self._owns_remote:
+                self.store.remote.close()
         for sock in self._listeners:
             # close() alone does not wake a thread blocked in accept():
             # the in-progress syscall keeps the listening file

@@ -1,0 +1,451 @@
+"""Remote store tier: cross-host materialization sharing (ISSUE 5).
+
+Correctness bar:
+
+* a local miss served by the remote tier is bit-identical to a local hit
+  (write-through → read-through round-trip);
+* TTL lease expiry releases a crashed holder's compute lease (heartbeat
+  stops → a sibling host acquires), while a heartbeating holder keeps it;
+* two "hosts" (separate workdirs, one object store) compute each shared
+  signature exactly once fleet-wide;
+* eviction — remote-tier or local — never deletes an entry another host
+  holds a live remote lease/pin on;
+* a failing backend degrades the tier to local-only instead of failing
+  the session.
+
+The "hosts" are separate Store/workdir instances inside one process —
+faithful, because nothing they share crosses process memory except the
+ObjectStore handle, which is itself just files (FsObjectStore).
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import IterativeSession
+from repro.core.locking import HAVE_FLOCK
+from repro.core.remote import (FsObjectStore, ObjectStore, RemoteStore,
+                               as_remote_store)
+from repro.core.store import Store
+from repro.core.workflow import Workflow
+
+pytestmark = pytest.mark.skipif(
+    not HAVE_FLOCK, reason="fleet mode needs POSIX flock")
+
+
+def _bucket(tmp_path) -> FsObjectStore:
+    return FsObjectStore(str(tmp_path / "bucket"))
+
+
+def _value(seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((64, 32)),
+            "idx": np.arange(128, dtype=np.int32),
+            "meta": {"k": seed}}
+
+
+# -- object-store backend ----------------------------------------------------
+
+def test_fs_object_store_roundtrip_and_conditional_put(tmp_path):
+    fs = _bucket(tmp_path)
+    assert fs.get("a/b") is None
+    fs.put("a/b", b"v1")
+    assert fs.get("a/b") == b"v1"
+    fs.put("a/b", b"v2")                       # replace
+    assert fs.get("a/b") == b"v2"
+    assert fs.put_if_absent("a/b", b"v3") is False   # taken
+    assert fs.get("a/b") == b"v2"              # loser changed nothing
+    assert fs.put_if_absent("a/c", b"w") is True
+    assert sorted(fs.list("a/")) == ["a/b", "a/c"]
+    assert fs.delete("a/b") is True
+    assert fs.delete("a/b") is False
+    assert fs.exists("a/c") and not fs.exists("a/b")
+
+
+# -- write-through / read-through --------------------------------------------
+
+def test_local_miss_remote_hit_bit_identical(tmp_path):
+    """Host A saves; host B (fresh workdir) loads through the remote
+    tier bit-identically, and the fetch populates B's local tier."""
+    fs = _bucket(tmp_path)
+    value = _value(7)
+    store_a = Store(str(tmp_path / "hostA"), remote=RemoteStore(fs))
+    store_a.save("ab12", "node", value,
+                 extra_meta={"compute_s": 2.0, "load_s_est": 0.01})
+    store_a.writer_drain()          # drains the upload queue too
+    assert store_a.remote.exists("ab12")
+
+    store_b = Store(str(tmp_path / "hostB"), remote=RemoteStore(fs))
+    assert store_b.has("ab12") and not store_b.has_local("ab12")
+    # meta falls back to the remote commit marker (planner load costs)
+    assert store_b.meta("ab12")["nbytes"] > 0
+    got, secs = store_b.load("ab12")
+    assert got["w"].dtype == value["w"].dtype
+    np.testing.assert_array_equal(got["w"], value["w"])
+    np.testing.assert_array_equal(got["idx"], value["idx"])
+    assert got["meta"] == {"k": 7}
+    assert secs > 0
+    # read-through populated the local tier; the next load is local
+    assert store_b.has_local("ab12")
+    assert store_b.remote_hits == 1
+    store_b.load("ab12")
+    assert store_b.remote_hits == 1
+
+
+def test_upload_is_idempotent_and_refused_over_budget(tmp_path):
+    fs = _bucket(tmp_path)
+    remote = RemoteStore(fs, budget_bytes=1)   # nothing fits
+    store = Store(str(tmp_path / "host"), remote=remote)
+    store.save("ab12", "node", np.ones(1024))
+    store.writer_drain()
+    assert not remote.exists("ab12")           # refused, local-only
+    assert remote.stats.n_upload_refused >= 1
+    assert store.has_local("ab12")             # the session still works
+
+
+# -- TTL leases --------------------------------------------------------------
+
+def test_ttl_lease_expiry_releases_crashed_holder(tmp_path):
+    """heartbeat stops (crash) → expiry frees the lease for a sibling;
+    a live heartbeat keeps it held past the TTL."""
+    fs = _bucket(tmp_path)
+    crashed = RemoteStore(fs, lease_ttl=0.3, heartbeats=False)
+    sibling = RemoteStore(fs, lease_ttl=0.3)
+    lease = crashed.acquire_compute("ab12")
+    assert lease is not None
+    assert sibling.acquire_compute("ab12") is None   # live holder
+    time.sleep(0.45)                                 # TTL passes, no renewal
+    taken = sibling.acquire_compute("ab12")
+    assert taken is not None                         # crash-released
+    # a heartbeating holder survives several TTLs
+    assert crashed.acquire_compute("ab12") is None
+    time.sleep(0.45)
+    assert crashed.acquire_compute("ab12") is None   # renewed, still held
+    taken.release()
+    assert not sibling.lease_live("ab12")
+    sibling.close()
+    crashed.close()
+
+
+def test_wait_compute_follows_remote_holder(tmp_path):
+    """A waiter on another 'host' polls the remote lease; the holder's
+    publish-before-release means the waiter finds the entry on wake."""
+    fs = _bucket(tmp_path)
+    store_a = Store(str(tmp_path / "hostA"),
+                    remote=RemoteStore(fs, lease_ttl=5.0))
+    store_b = Store(str(tmp_path / "hostB"),
+                    remote=RemoteStore(fs, lease_ttl=5.0))
+    lease = store_a.acquire_compute("ab12")
+    assert lease is not None
+    assert store_b.acquire_compute("ab12") is None   # cross-host exclusion
+
+    def holder():
+        time.sleep(0.25)
+        store_a.save("ab12", "node", _value(1))
+        store_a.upload_now("ab12")          # publish-before-release
+        lease.release()
+
+    t = threading.Thread(target=holder)
+    t.start()
+    assert store_b.wait_compute("ab12", timeout=30)
+    assert store_b.has("ab12")
+    got, _ = store_b.load("ab12")
+    np.testing.assert_array_equal(got["w"], _value(1)["w"])
+    t.join()
+
+
+# -- two hosts, one workflow -------------------------------------------------
+
+def _counting_workflow(tag: str, calls: dict, lock: threading.Lock):
+    """src → feat (slow, shared) → out; every compute bumps a counter."""
+    def count(name):
+        with lock:
+            calls[name] = calls.get(name, 0) + 1
+
+    wf = Workflow("two-host")
+    src = wf.source(
+        "src", lambda: (count("src"),
+                        np.arange(2048, dtype=np.float64))[1],
+        config="v1")
+
+    def featurize(x):
+        count("feat")
+        acc = x.reshape(32, 64).copy()
+        for _ in range(600):    # heavy enough that LOAD decisively wins
+            acc = np.tanh(acc @ acc.T @ acc / acc.size)
+        return acc
+
+    feat = wf.extractor("feat", featurize, [src], config="v1")
+    out = wf.reducer(
+        "out", lambda z, t=tag: {"score": float(np.sum(z)), "tag": t},
+        [feat], config=("tail", tag))
+    wf.output(out)
+    return wf
+
+
+def test_two_hosts_compute_each_shared_signature_once(tmp_path):
+    """Two hosts (own workdirs, one object store) run workflows sharing
+    a prefix concurrently: each shared signature is computed exactly
+    once fleet-wide, and both get bit-identical prefix values. The
+    shared-signature set is passed like real drivers (sweep pre-pass /
+    server multiplicity map) pass it — that is what makes the lease
+    holder force-persist even when it wins the race outright."""
+    from repro.core import compute_signatures
+
+    fs = _bucket(tmp_path)
+    calls: dict = {}
+    lock = threading.Lock()
+    reports = {}
+    barrier = threading.Barrier(2)
+    sig_sets = [
+        set(compute_signatures(
+            _counting_workflow(f"h{i}", {}, lock).build()).values())
+        for i in (0, 1)]
+    shared = frozenset(sig_sets[0] & sig_sets[1])
+    assert shared   # the prefix really is signature-equivalent
+
+    def host(i):
+        sess = IterativeSession(
+            str(tmp_path / f"host{i}"), dedupe_inflight=True,
+            store=Store(str(tmp_path / f"host{i}" / "store"),
+                        remote=RemoteStore(fs, lease_ttl=30.0)))
+        barrier.wait()
+        reports[i] = sess.run(_counting_workflow(f"h{i}", calls, lock),
+                              share_sigs=shared)
+        sess.store.writer_drain()
+
+    threads = [threading.Thread(target=host, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # shared prefix: exactly one compute fleet-wide
+    assert calls["feat"] == 1, calls
+    assert calls["src"] == 1, calls
+    # per-host tails both ran, outputs agree on the shared part
+    s0 = reports[0].outputs["out"]["score"]
+    s1 = reports[1].outputs["out"]["score"]
+    assert s0 == s1
+    # the loser host loaded (planned LOAD or in-flight dedupe), never
+    # recomputed
+    n_feat_computed = sum(
+        1 for r in reports.values()
+        for n, s in r.execution.states.items()
+        if n == "feat" and s.name == "COMPUTE"
+        and n not in r.execution.deduped)
+    assert n_feat_computed <= 1
+
+
+# -- eviction vs leases ------------------------------------------------------
+
+def test_remote_eviction_never_deletes_leased_entry(tmp_path):
+    """Over-budget uploads evict lowest-benefit remote entries — but an
+    entry another host pinned (or holds a compute lease on) is vetoed."""
+    fs = _bucket(tmp_path)
+    nb = np.ones(8192).nbytes
+    remote = RemoteStore(fs, budget_bytes=int(nb * 2.5))
+    store = Store(str(tmp_path / "hostA"), remote=remote)
+    # two cheap entries fill the budget; "aa01" is the worst candidate
+    store.save("aa01", "junk1", np.ones(8192))
+    store.save("bb02", "junk2", np.ones(8192),
+               extra_meta={"compute_s": 50.0, "load_s_est": 0.01})
+    store.writer_drain()
+    assert remote.exists("aa01") and remote.exists("bb02")
+
+    # host B pins the *worst* candidate (it plans to LOAD it)
+    host_b = RemoteStore(fs)
+    pin = host_b.acquire_pin("aa01")
+    assert pin is not None
+
+    store.save("cc03", "hot", np.ones(8192),
+               extra_meta={"compute_s": 99.0, "load_s_est": 0.01})
+    store.writer_drain()
+    # the pinned entry survived; the unpinned low-benefit one went
+    assert remote.exists("aa01"), "evicted a remotely-pinned entry"
+    assert remote.exists("cc03")
+    assert not remote.exists("bb02")
+    assert remote.stats.n_veto_protected >= 1
+    assert remote.stats.n_evicted == 1
+
+    pin.release()
+    # unpinned now: the next over-budget upload may take it
+    store.save("dd04", "hot2", np.ones(8192),
+               extra_meta={"compute_s": 99.0, "load_s_est": 0.01})
+    store.writer_drain()
+    assert not remote.exists("aa01")
+    host_b.close()
+
+
+def test_read_pin_spans_tiers_for_remote_only_entries(tmp_path):
+    """acquire_read on a remote-only entry takes a remote TTL pin, so no
+    other host's eviction can delete it before the planned LOAD."""
+    fs = _bucket(tmp_path)
+    store_a = Store(str(tmp_path / "hostA"), remote=RemoteStore(fs))
+    store_a.save("ab12", "node", np.ones(512))
+    store_a.writer_drain()
+
+    store_b = Store(str(tmp_path / "hostB"), remote=RemoteStore(fs))
+    assert not store_b.has_local("ab12")
+    pin = store_b.acquire_read("ab12")      # plan-time pin
+    assert pin is not None
+    assert store_b.remote.pinned("ab12")
+    # another host's remote eviction respects the pin
+    assert store_a.remote.delete_entry("ab12") == 0
+    assert store_a.remote.stats.n_veto_protected >= 1
+    pin.release()
+    assert not store_b.remote.pinned("ab12")
+    assert store_a.remote.delete_entry("ab12") > 0
+
+
+# -- degradation -------------------------------------------------------------
+
+class _FlakyBackend(ObjectStore):
+    """Delegating backend that can be switched to hard-failing."""
+
+    def __init__(self, inner: ObjectStore):
+        self.inner = inner
+        self.broken = False
+
+    def _check(self):
+        if self.broken:
+            raise OSError("backend unreachable")
+
+    def put(self, key, data):
+        self._check()
+        return self.inner.put(key, data)
+
+    def get(self, key):
+        self._check()
+        return self.inner.get(key)
+
+    def list(self, prefix):
+        self._check()
+        return self.inner.list(prefix)
+
+    def delete(self, key):
+        self._check()
+        return self.inner.delete(key)
+
+    def put_if_absent(self, key, data):
+        self._check()
+        return self.inner.put_if_absent(key, data)
+
+    def exists(self, key):
+        self._check()
+        return self.inner.exists(key)
+
+
+def test_remote_unreachable_degrades_to_local_only(tmp_path):
+    """Backend failures mark the tier degraded for a cool-down; every
+    store operation keeps working local-only (no exception escapes)."""
+    flaky = _FlakyBackend(_bucket(tmp_path))
+    remote = RemoteStore(flaky, degrade_seconds=3600.0)
+    store = Store(str(tmp_path / "host"), remote=remote)
+    store.save("ab12", "node", np.ones(64))
+    store.writer_drain()
+    assert remote.exists("ab12")
+
+    flaky.broken = True
+    remote.marker_meta("zz99", fresh=True)    # trips degradation
+    assert not remote.available()
+    assert remote.stats.n_errors >= 1
+    # everything still works, local-tier only
+    store.save("cd34", "node2", np.ones(64))
+    store.writer_drain()
+    assert store.has_local("cd34")
+    assert store.has("cd34")
+    assert not store.has("ef56")              # remote not consulted
+    got, _ = store.load("ab12")               # was populated locally
+    np.testing.assert_array_equal(got, np.ones(64))
+    lease = store.acquire_compute("gh78")     # local-only lease works
+    assert lease is not None
+    lease.release()
+    with pytest.raises(FileNotFoundError):
+        store.load("ef56")                    # miss is a miss, not a hang
+
+
+# -- observability -----------------------------------------------------------
+
+def test_tier_status_and_lease_counts(tmp_path):
+    """Store.tier_status reports per-tier bytes, entries, and a live
+    lease census — the numbers SessionServer.status() surfaces."""
+    fs = _bucket(tmp_path)
+    store = Store(str(tmp_path / "host"), remote=RemoteStore(fs))
+    store.save("ab12", "node", np.ones(256))
+    store.writer_drain()
+    lease = store.acquire_compute("cd34")
+    pin = store.acquire_read("ab12")
+    try:
+        status = store.tier_status()
+        local, remote = status["local"], status["remote"]
+        assert local["entries"] == 1 and local["bytes"] > 0
+        assert local["leases"]["compute"] == 1
+        assert local["leases"]["pins"] == 1
+        assert remote is not None and remote["available"]
+        assert remote["entries"] == 1 and remote["bytes"] > 0
+        assert remote["leases"]["compute"] == 1   # TTL lease object
+        assert remote["n_uploads"] == 1
+    finally:
+        pin.release()
+        lease.release()
+    status = store.tier_status()
+    assert status["local"]["leases"] == {"compute": 0, "pins": 0,
+                                         "waiters": 0}
+
+
+def test_server_status_reports_tiers(tmp_path):
+    """SessionServer.status() carries the per-tier breakdown (the ISSUE
+    5 observability bugfix: not just a single local byte count)."""
+    from repro.serve.server import SessionServer
+
+    server = SessionServer(str(tmp_path / "srv"),
+                           remote=str(tmp_path / "bucket"))
+    try:
+        status = server.status()
+        assert "tiers" in status
+        assert status["tiers"]["local"]["leases"] == {
+            "compute": 0, "pins": 0, "waiters": 0}
+        assert status["tiers"]["remote"] is not None
+        assert status["tiers"]["remote"]["available"]
+        assert status["store_bytes"] == status["tiers"]["local"]["bytes"]
+    finally:
+        server.shutdown()
+
+
+def test_as_remote_store_coercions(tmp_path):
+    fs = _bucket(tmp_path)
+    r = RemoteStore(fs)
+    assert as_remote_store(None) is None
+    assert as_remote_store(r) is r
+    assert isinstance(as_remote_store(fs), RemoteStore)
+    built = as_remote_store(str(tmp_path / "other"), budget_bytes=123.0)
+    assert isinstance(built, RemoteStore)
+    assert built.budget_bytes == 123.0
+    with pytest.raises(TypeError):
+        as_remote_store(42)
+
+
+def test_multi_host_sweep_shares_via_remote_tier(tmp_path):
+    """run_sweep(n_hosts=2, remote=...): separate per-host workdirs,
+    shared remote tier — zero wasted recomputes and cross-host fetches."""
+    from repro.core import SweepVariant, run_sweep
+
+    calls: dict = {}
+    lock = threading.Lock()
+    variants = [
+        SweepVariant(name=f"v{i}",
+                     build=(lambda t=f"v{i}": _counting_workflow(
+                         t, calls, lock)))
+        for i in range(4)]
+    report = run_sweep(str(tmp_path / "sweep"), variants, n_hosts=2,
+                       remote=str(tmp_path / "bucket"))
+    report.raise_errors()
+    assert report.wasted_recomputes() == 0
+    assert calls["feat"] == 1, calls          # once across both hosts
+    assert report.remote.get("n_uploads", 0) >= 1
+    assert report.remote.get("n_fetches", 0) >= 1
+    # per-host workdirs actually exist (the deployment shape)
+    assert os.path.isdir(str(tmp_path / "sweep" / "host0"))
+    assert os.path.isdir(str(tmp_path / "sweep" / "host1"))

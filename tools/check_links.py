@@ -4,7 +4,14 @@
 Checks every ``[text](target)`` markdown link in the given files:
 
 * relative file links must exist on disk (anchors are stripped; ``#foo``
-  anchors within the same file are checked against its headings);
+  anchors within the same file are checked against its headings).
+  Resolution follows markdown semantics — relative to the *linking
+  file's* directory — but intra-repo links written repo-root-relative
+  (the common GitHub style, e.g. ``docs/architecture.md`` linked from
+  another file under ``docs/``) are also accepted when they resolve
+  from the repo root (``--root``, default: the current directory), as
+  are ``/``-absolute targets (resolved against the repo root, which is
+  how GitHub renders them);
 * ``http(s)`` URLs are format-checked only (CI must not flake on the
   network);
 * code spans and fenced code blocks are ignored.
@@ -41,7 +48,7 @@ def strip_code(lines: list[str]) -> list[str]:
     return out
 
 
-def check_file(path: str) -> list[str]:
+def check_file(path: str, root: str) -> list[str]:
     with open(path, encoding="utf-8") as f:
         raw = f.read().splitlines()
     lines = strip_code(raw)
@@ -62,19 +69,43 @@ def check_file(path: str) -> list[str]:
                     errors.append(f"{path}:{i}: missing anchor {target}")
                 continue
             rel = target.split("#", 1)[0]
-            if rel and not os.path.exists(os.path.join(base, rel)):
-                errors.append(f"{path}:{i}: missing file {target}")
+            if not rel:
+                continue
+            if rel.startswith("/"):
+                # GitHub renders /-absolute targets against the repo
+                # root, not the filesystem root.
+                if not os.path.exists(os.path.join(root,
+                                                   rel.lstrip("/"))):
+                    errors.append(f"{path}:{i}: missing file {target}")
+                continue
+            if os.path.exists(os.path.join(base, rel)):
+                continue   # proper markdown resolution (file-relative)
+            # Fallback: intra-repo links written root-relative (a file
+            # under docs/ saying ``docs/operations.md``). Previously
+            # only links *from* the repo root resolved these — the same
+            # link inside docs/ was a false "missing file".
+            if os.path.exists(os.path.join(root, rel)):
+                continue
+            errors.append(f"{path}:{i}: missing file {target}")
     return errors
 
 
 def main(argv: list[str]) -> int:
-    files = argv or ["README.md"]
+    root = os.getcwd()
+    files = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--root":
+            root = next(it, root)
+        else:
+            files.append(arg)
+    files = files or ["README.md"]
     all_errors: list[str] = []
     for path in files:
         if not os.path.exists(path):
             all_errors.append(f"{path}: file not found")
             continue
-        all_errors.extend(check_file(path))
+        all_errors.extend(check_file(path, root))
     for e in all_errors:
         print(e, file=sys.stderr)
     print(f"checked {len(files)} file(s): "
