@@ -8,11 +8,12 @@ from .oep import plan, plan_runtime, brute_force_plan
 from .omp import Materializer, Policy, cumulative_runtime
 from .eviction import EvictionStats, Evictor
 from .remote import (FsObjectStore, ObjectStore, RemoteStats, RemoteStore,
-                     as_remote_store)
+                     TransientBackendError, as_remote_store)
+from .faults import ChaosObjectStore, FaultPlan, InjectedCrash
 from .store import ComputeLease, ReadPin, Store, tree_nbytes
 from .locking import FileLock, SharedEwma, StorageLedger
 from .costs import CostModel
-from .executor import ExecutionReport, execute
+from .executor import ExecutionReport, JobCancelled, execute
 from .workflow import Ref, Workflow
 from .session import IterationReport, IterativeSession
 from .pruning import slice_from_outputs, zero_weight_extractors
@@ -26,10 +27,11 @@ __all__ = [
     "Materializer", "Policy", "cumulative_runtime",
     "EvictionStats", "Evictor",
     "FsObjectStore", "ObjectStore", "RemoteStats", "RemoteStore",
-    "as_remote_store",
+    "TransientBackendError", "as_remote_store",
+    "ChaosObjectStore", "FaultPlan", "InjectedCrash",
     "ComputeLease", "ReadPin", "Store", "tree_nbytes", "CostModel",
     "FileLock", "SharedEwma", "StorageLedger",
-    "ExecutionReport", "execute",
+    "ExecutionReport", "JobCancelled", "execute",
     "Ref", "Workflow",
     "slice_from_outputs", "zero_weight_extractors",
     "IterationReport", "IterativeSession",

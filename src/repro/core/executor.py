@@ -76,6 +76,14 @@ from .omp import Materializer, cumulative_runtime
 from .store import Store, tree_nbytes
 
 
+class JobCancelled(RuntimeError):
+    """The execution's cancel flag fired and the run stopped between
+    nodes. Raised out of :func:`execute` after the normal settle path
+    (pending saves drained, reservations reconciled or released, leases
+    released by their ``finally`` blocks) — the session server reports
+    it as status ``cancelled``, not ``error``."""
+
+
 @dataclasses.dataclass
 class ExecutionReport:
     states: dict[str, State]
@@ -128,7 +136,8 @@ class _Scheduler:
                  dedupe_wait_seconds: float = 120.0,
                  share_sigs: frozenset | set | None = None,
                  dedupe_skip: frozenset | set | None = None,
-                 worker_pool=None):
+                 worker_pool=None,
+                 cancel: threading.Event | None = None):
         self.dag = dag
         self.sigs = sigs
         self.states = states
@@ -157,6 +166,12 @@ class _Scheduler:
         # (load costlier than recompute): the dedupe shortcut must not
         # override that judgment by loading anyway.
         self.dedupe_skip = frozenset(dedupe_skip or ())
+        # Cooperative cancellation: checked between nodes (and inside
+        # lease waits). When it fires, the first worker to notice sets
+        # ``self.error`` to JobCancelled and the run winds down through
+        # the normal error path — leases, pins, and reservations are
+        # released by the same finally/settle code an exception uses.
+        self.cancel = cancel
 
         self.cv = threading.Condition()
         topo = dag.topological()
@@ -194,6 +209,17 @@ class _Scheduler:
         self.error: BaseException | None = None
 
     # -- scheduling --------------------------------------------------------
+    def _cancelled_locked(self) -> bool:
+        """Between-nodes cancel check (lock held): the first worker that
+        sees the flag turns it into the run's error so every worker winds
+        down through the normal error path."""
+        if self.cancel is None or not self.cancel.is_set():
+            return False
+        if self.error is None:
+            self.error = JobCancelled("job cancelled between nodes")
+            self.cv.notify_all()
+        return True
+
     def _pop_runnable_locked(self) -> str | None:
         """Pop the lowest-topo-index runnable node, honoring the prefetch
         gate for LOAD nodes. Returns None when nothing can start right now.
@@ -255,6 +281,8 @@ class _Scheduler:
         lease = None
         deadline = time.monotonic() + self.dedupe_wait_seconds
         while True:
+            if self.cancel is not None and self.cancel.is_set():
+                raise JobCancelled(f"cancelled while deduping {name!r}")
             if self.store.has(sig):
                 try:
                     value, secs = self.store.load(
@@ -279,7 +307,11 @@ class _Scheduler:
             remaining = deadline - time.monotonic()
             if remaining <= 0:
                 break  # bounded wait: duplicate-compute beats deadlock
-            if not self.store.wait_compute(sig, timeout=remaining):
+            if not self.store.wait_compute(sig, timeout=remaining,
+                                           cancel=self.cancel):
+                if self.cancel is not None and self.cancel.is_set():
+                    raise JobCancelled(
+                        f"cancelled while waiting on lease for {name!r}")
                 break
             # The lease lock came free (or is only held by shared read
             # pins, which coexist with our shared wait) yet the entry is
@@ -498,10 +530,15 @@ class _Scheduler:
             with self.cv:
                 name = None
                 while self.error is None and self.n_done < self.n_total:
+                    if self._cancelled_locked():
+                        break
                     name = self._pop_runnable_locked()
                     if name is not None:
                         break
-                    self.cv.wait()
+                    # The canceller only sets an Event (it has no handle
+                    # on this cv), so waits must time out to notice it.
+                    self.cv.wait(timeout=0.25 if self.cancel is not None
+                                 else None)
                 if name is None:
                     return
             try:
@@ -617,7 +654,8 @@ def execute(dag: DAG,
             dedupe_wait_seconds: float = 120.0,
             share_sigs: frozenset | set | None = None,
             dedupe_skip: frozenset | set | None = None,
-            worker_pool=None) -> ExecutionReport:
+            worker_pool=None,
+            cancel: threading.Event | None = None) -> ExecutionReport:
     """Execute a planned DAG. See the module docstring for the scheduler
     model; ``max_workers=1`` reproduces the sequential paper engine
     exactly. ``dedupe_inflight`` enables the fleet-wide compute-once
@@ -626,7 +664,11 @@ def execute(dag: DAG,
     sessions (always persisted on lease-compute). ``worker_pool`` (a
     ``repro.serve.SharedWorkerPool``) makes the worker count elastic:
     extra workers are borrowed from one process-wide pool shared by all
-    sessions instead of spawned per call."""
+    sessions instead of spawned per call. ``cancel`` (a
+    ``threading.Event``) requests cooperative cancellation: workers
+    check it between nodes and inside lease waits, the run stops with
+    :class:`JobCancelled`, and cleanup (pending saves, reservations,
+    leases) follows the same settle path any error takes."""
     t_start = time.perf_counter()
     sched = _Scheduler(dag, sigs, states, store, materializer,
                        load_shardings, async_materialization,
@@ -635,7 +677,8 @@ def execute(dag: DAG,
                        dedupe_wait_seconds=dedupe_wait_seconds,
                        share_sigs=share_sigs,
                        dedupe_skip=dedupe_skip,
-                       worker_pool=worker_pool)
+                       worker_pool=worker_pool,
+                       cancel=cancel)
     sched.run()
     outputs = {n: sched.cache[n] for n in dag.outputs() if n in sched.cache}
     return ExecutionReport(

@@ -69,12 +69,32 @@ class FileLock:
         self._local: threading.Lock | None = None
 
     def acquire(self, blocking: bool = True,
-                timeout: float | None = None) -> bool:
+                timeout: float | None = None,
+                cancel: "threading.Event | None" = None) -> bool:
+        """Take the lock. ``timeout`` bounds a blocking acquire;
+        ``cancel`` (a ``threading.Event``) aborts one early — a set
+        event makes this return False at the next poll step, so a
+        cancelled job never sits in an unbounded lease wait. Passing
+        ``cancel`` forces the polling path even with no timeout."""
         if not HAVE_FLOCK:
             self._local = _local_lock_for(self.path)
-            got = self._local.acquire(
-                blocking, -1 if timeout is None else timeout) \
-                if blocking else self._local.acquire(False)
+            if blocking and cancel is not None:
+                deadline = None if timeout is None \
+                    else time.monotonic() + timeout
+                got = False
+                while True:
+                    if self._local.acquire(False):
+                        got = True
+                        break
+                    if cancel.is_set() or (
+                            deadline is not None
+                            and time.monotonic() >= deadline):
+                        break
+                    time.sleep(0.005)
+            else:
+                got = self._local.acquire(
+                    blocking, -1 if timeout is None else timeout) \
+                    if blocking else self._local.acquire(False)
             if not got:
                 self._local = None
             return got
@@ -85,7 +105,7 @@ class FileLock:
             fd = os.open(self.path, os.O_RDWR | os.O_CREAT, 0o644)
             got = False
             try:
-                if blocking and deadline is None:
+                if blocking and deadline is None and cancel is None:
                     fcntl.flock(fd, mode)
                     got = True
                 else:
@@ -98,6 +118,8 @@ class FileLock:
                             if not blocking or (
                                     deadline is not None
                                     and time.monotonic() >= deadline):
+                                break
+                            if cancel is not None and cancel.is_set():
                                 break
                             time.sleep(0.005)
                 if not got:

@@ -33,10 +33,19 @@ behind the same signature-keyed API so *hosts* share materializations:
   each ``.complete`` marker carries) — but never an entry with a live
   remote lease or read pin, and never for an upload less valuable than
   the candidates (the local evictor's limit-density rule, transposed).
-* **Degradation** — any backend ``OSError`` marks the tier degraded for
-  a cool-down window; every caller then sees "remote absent" and the
-  host keeps working local-only (see docs/operations.md, failure
-  modes).
+* **Error classification + recovery** — backend errors are two kinds.
+  *Transient* ones (:class:`TransientBackendError`: throttles, 5xx,
+  connection resets — an adapter raises it for anything worth retrying)
+  are retried in place with exponential backoff + jitter and never
+  degrade the tier unless retries exhaust. Anything else (*permanent*
+  for the purposes of this window: auth failures, dead mounts,
+  exhausted retries) marks the tier degraded: every caller sees
+  "remote absent" and the host keeps working local-only. Degradation
+  is a cool-down that *re-probes*: after the window a single cheap
+  health probe runs before the tier is declared usable again, and a
+  failing probe re-degrades with an escalating (capped) window — so a
+  dead backend costs one probe per window, not one failed real
+  operation per caller (see docs/operations.md, failure modes).
 
 Clock caveat: TTL expiry compares the *reader's* clock against the
 *writer's* ``expires`` stamp, so lease TTLs must comfortably exceed
@@ -48,6 +57,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import random
 import socket
 import threading
 import time
@@ -60,6 +70,19 @@ from typing import Any
 _LEASE_PREFIX = "leases/"
 _ENTRY_PREFIX = "entries/"
 _MARKER = ".complete"
+# Key probed (a cheap existence check) by the post-degradation health
+# re-probe; it never needs to exist — the probe only asks whether the
+# backend *answers*.
+_HEALTH_KEY = "health/probe"
+
+
+class TransientBackendError(OSError):
+    """A backend failure worth retrying in place (throttle, 5xx,
+    connection reset). :class:`RemoteStore` retries these with
+    exponential backoff + jitter instead of degrading the tier;
+    adapters over real object stores should raise it for any error
+    their SDK classifies as retryable. Every other ``OSError`` is
+    treated as permanent for the current degradation window."""
 
 
 class ObjectStore:
@@ -215,6 +238,79 @@ class FsObjectStore(ObjectStore):
             return None
 
 
+class _RetryingStore(ObjectStore):
+    """Transparent transient-error retry decorator over a backend.
+
+    Retries :class:`TransientBackendError` with exponential backoff +
+    jitter, up to ``max_retries`` extra attempts, then re-raises (the
+    caller's degradation handling takes over). Non-transient errors
+    pass straight through. Jitter decorrelates N hosts hammering a
+    throttled backend in lockstep.
+
+    Retry caveat (shared with every at-least-once client): a request
+    that *succeeded* backend-side but whose response was lost is
+    retried. All tier operations tolerate that — puts are idempotent
+    whole-object writes, deletes return False, and a retried
+    ``put_if_absent`` that loses to its own first attempt reports
+    "already present", which the lease protocol treats as "someone
+    holds it" and resolves via the TTL.
+    """
+
+    def __init__(self, inner: ObjectStore, stats: "RemoteStats",
+                 max_retries: int = 3, backoff: float = 0.05,
+                 backoff_cap: float = 2.0):
+        """Wrap ``inner``; retry counts accumulate on ``stats``."""
+        self.inner = inner
+        self.stats = stats
+        self.max_retries = max(0, int(max_retries))
+        self.backoff = float(backoff)
+        self.backoff_cap = float(backoff_cap)
+        self._rng = random.Random()   # jitter only — no determinism need
+
+    def _call(self, op: str, *args):
+        delay = self.backoff
+        attempt = 0
+        while True:
+            try:
+                return getattr(self.inner, op)(*args)
+            except TransientBackendError:
+                if attempt >= self.max_retries:
+                    raise
+                attempt += 1
+                self.stats.n_retries += 1
+                # Full jitter on an exponential schedule.
+                time.sleep(delay * (0.5 + self._rng.random()))
+                delay = min(delay * 2.0, self.backoff_cap)
+
+    def put(self, key: str, data: bytes) -> None:
+        """Retrying ``put``."""
+        return self._call("put", key, data)
+
+    def get(self, key: str) -> bytes | None:
+        """Retrying ``get``."""
+        return self._call("get", key)
+
+    def list(self, prefix: str) -> list[str]:
+        """Retrying ``list``."""
+        return self._call("list", prefix)
+
+    def delete(self, key: str) -> bool:
+        """Retrying ``delete``."""
+        return self._call("delete", key)
+
+    def put_if_absent(self, key: str, data: bytes) -> bool:
+        """Retrying conditional put (see class docstring's caveat)."""
+        return self._call("put_if_absent", key, data)
+
+    def exists(self, key: str) -> bool:
+        """Retrying presence probe."""
+        return self._call("exists", key)
+
+    def mtime(self, key: str) -> float | None:
+        """Retrying mtime probe."""
+        return self._call("mtime", key)
+
+
 @dataclasses.dataclass
 class RemoteStats:
     """Counters for one remote tier handle's lifetime."""
@@ -226,6 +322,8 @@ class RemoteStats:
     bytes_evicted: int = 0      # their recorded bytes
     n_veto_protected: int = 0   # eviction candidates with live lease/pin
     n_errors: int = 0           # backend OSErrors (→ degradation windows)
+    n_retries: int = 0          # transient-error retries (backoff layer)
+    n_recoveries: int = 0       # successful post-degradation re-probes
 
     def snapshot(self) -> dict:
         """JSON-safe copy (server status / benchmark reporting)."""
@@ -283,21 +381,50 @@ class RemoteStore:
                  lease_ttl: float = 60.0,
                  heartbeats: bool = True,
                  degrade_seconds: float = 30.0,
-                 owner: str | None = None):
-        """Open a per-host handle on the shared tier (see class doc)."""
-        self.objects = objects
+                 degrade_max_seconds: float | None = None,
+                 max_retries: int = 3,
+                 retry_backoff: float = 0.05,
+                 owner: str | None = None,
+                 faults: Any | None = None):
+        """Open a per-host handle on the shared tier (see class doc).
+
+        ``max_retries`` / ``retry_backoff`` tune the transient-error
+        retry layer (attempts beyond the first, and its initial backoff
+        — exponential with jitter). ``degrade_seconds`` is the first
+        degradation window after a permanent error; consecutive failed
+        re-probes double it up to ``degrade_max_seconds`` (default
+        8 × ``degrade_seconds``).
+
+        ``faults`` (tests only) is a :class:`~repro.core.faults
+        .FaultPlan` consulted at the named crash points of the
+        publish/lease/heartbeat paths — ``upload:begin``,
+        ``upload:before_marker`` (between "value uploaded" and "marker
+        uploaded"), ``upload:after_marker``, ``lease:acquired``,
+        ``lease:before_release``, ``delete:after_marker`` — and before
+        each heartbeat renewal (:meth:`FaultPlan.drop_heartbeat`).
+        """
+        self.stats = RemoteStats()
+        self.objects: ObjectStore = _RetryingStore(
+            objects, self.stats, max_retries=max_retries,
+            backoff=retry_backoff)
         self.budget_bytes = float(budget_bytes)
         self.lease_ttl = float(lease_ttl)
         self.heartbeats = bool(heartbeats)
         self.degrade_seconds = float(degrade_seconds)
+        self.degrade_max_seconds = (float(degrade_max_seconds)
+                                    if degrade_max_seconds is not None
+                                    else 8.0 * self.degrade_seconds)
         self.owner = owner or (f"{socket.gethostname()}-{os.getpid()}"
                                f"-{uuid.uuid4().hex[:8]}")
-        self.stats = RemoteStats()
+        self._faults = faults
         self._lock = threading.Lock()
         self._held: dict[str, RemoteLease] = {}
         self._hb_thread: threading.Thread | None = None
         self._hb_stop = threading.Event()
         self._degraded_until = 0.0
+        self._degrade_streak = 0        # consecutive windows, resets on probe
+        self._probe_pending = False     # degraded at least once; must re-probe
+        self._probe_lock = threading.Lock()
         self._closed = False
         # Marker metadata cache: sig -> (stamp, meta | None). Presence
         # probes and rankings hit this instead of the backend; negatives
@@ -314,14 +441,56 @@ class RemoteStore:
         self._bytes_cache: tuple[float, int] | None = None
         self._bytes_ttl = 10.0
 
-    # -- degradation -------------------------------------------------------
+    # -- degradation / recovery --------------------------------------------
     def available(self) -> bool:
-        """Is the tier currently usable (not in a degradation window)?"""
-        return not self._closed and time.monotonic() >= self._degraded_until
+        """Is the tier currently usable (not in a degradation window)?
+
+        After a degradation window passes, the first caller runs a
+        cheap health probe against the backend before the tier is
+        declared usable again (the *re-probe and recover* path): a
+        failing probe re-degrades with an escalating window, so a dead
+        backend costs one probe per window instead of a failed real
+        operation per caller."""
+        if self._closed or time.monotonic() < self._degraded_until:
+            return False
+        if not self._probe_pending:
+            return True
+        return self._reprobe()
+
+    def _reprobe(self) -> bool:
+        """One health probe after a degradation window (single-flight:
+        concurrent callers treat the tier as still-degraded while one
+        probes). True iff the backend answered and the tier recovered."""
+        if not self._probe_lock.acquire(blocking=False):
+            return False
+        try:
+            if not self._probe_pending:      # a racer already recovered us
+                return True
+            try:
+                self.objects.exists(_HEALTH_KEY)
+            except OSError as e:
+                self._degrade(e)
+                return False
+            self._probe_pending = False
+            self._degrade_streak = 0
+            self.stats.n_recoveries += 1
+            return True
+        finally:
+            self._probe_lock.release()
 
     def _degrade(self, exc: BaseException) -> None:
         self.stats.n_errors += 1
-        self._degraded_until = time.monotonic() + self.degrade_seconds
+        self._degrade_streak += 1
+        window = min(
+            self.degrade_seconds * (2.0 ** (self._degrade_streak - 1)),
+            self.degrade_max_seconds)
+        self._degraded_until = time.monotonic() + window
+        self._probe_pending = True
+
+    def _crash_point(self, name: str) -> None:
+        """Fire an armed test crash point (no-op without a fault plan)."""
+        if self._faults is not None:
+            self._faults.crash_point(name)
 
     # -- lease objects -----------------------------------------------------
     def _lease_key(self, sig: str) -> str:
@@ -368,6 +537,7 @@ class RemoteStore:
             self._held.pop(lease.key, None)
         if lease.lost:
             return  # not ours anymore: deleting would break the taker
+        self._crash_point("lease:before_release")
         try:
             cur = self._read_obj(lease.key)
             if cur is not None and cur.get("owner") == self.owner:
@@ -390,6 +560,9 @@ class RemoteStore:
                     self._hb_thread = None
                     return
                 held = list(self._held.values())
+            if (self._faults is not None
+                    and self._faults.drop_heartbeat()):
+                continue   # injected GC pause: skip this renewal round
             for lease in held:
                 if lease.lost or lease._released:
                     continue
@@ -419,6 +592,11 @@ class RemoteStore:
             for _ in range(2):
                 if self.objects.put_if_absent(key,
                                               self._lease_blob("compute")):
+                    # Crash point: the lease object exists but the
+                    # holder dies before tracking/heartbeating it — the
+                    # canonical crashed-holder scenario (released by TTL
+                    # expiry + takeover, never by this process).
+                    self._crash_point("lease:acquired")
                     return self._track(RemoteLease(self, key, "compute"))
                 cur = self._read_obj(key)
                 if self._live(cur):
@@ -644,6 +822,7 @@ class RemoteStore:
         try:
             if self.objects.exists(self._marker_key(sig)):
                 return True   # some host already committed it
+            self._crash_point("upload:begin")
             nbytes = int(meta.get("nbytes", 0) or 0)
             if self.budget_bytes != float("inf"):
                 from .eviction import benefit_density  # local: no cycle
@@ -674,6 +853,11 @@ class RemoteStore:
                 except OSError:
                     return False   # local eviction raced us: abort
                 self.objects.put(f"{_ENTRY_PREFIX}{sig}/{name}", data)
+            # Crash point: every data object uploaded, marker not yet —
+            # the torn-publish window the commit protocol exists for.
+            # A crash here leaves only invisible orphans (gc_orphans
+            # reclaims them); readers never see a partial entry.
+            self._crash_point("upload:before_marker")
             marker = {k: meta.get(k) for k in
                       ("name", "nbytes", "created", "compute_s",
                        "load_s_est") if k in meta}
@@ -682,6 +866,7 @@ class RemoteStore:
             marker["uploaded_at"] = time.time()
             self.objects.put(self._marker_key(sig),
                              json.dumps(marker).encode())
+            self._crash_point("upload:after_marker")
             self._invalidate(sig)
             self._bytes_adjust(nbytes)
             self.stats.n_uploads += 1
@@ -745,6 +930,9 @@ class RemoteStore:
             if not self.objects.delete(self._marker_key(sig)):
                 return 0   # another host's eviction won the race
             self._invalidate(sig)
+            # Crash point: un-published (marker gone) but data objects
+            # still present — the interrupted-delete orphan scenario.
+            self._crash_point("delete:after_marker")
             for key in self.objects.list(f"{_ENTRY_PREFIX}{sig}/"):
                 self.objects.delete(key)
             freed = int(marker.get("nbytes", 0) or 0)

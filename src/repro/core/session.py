@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 from typing import Any, Callable, Mapping
 
 from .costs import CostModel
@@ -201,13 +202,17 @@ class IterativeSession:
     def run(self, workflow: Workflow,
             load_shardings: Mapping[str, Callable] | None = None,
             nonces: Mapping[str, str] | None = None,
-            share_sigs: frozenset | set | None = None) -> IterationReport:
+            share_sigs: frozenset | set | None = None,
+            cancel: "threading.Event | None" = None) -> IterationReport:
         """Run one iteration. ``nonces`` optionally pins the signature
         nonces of nondeterministic nodes — the sweep driver passes one
         shared nonce map so identical unseeded operators across concurrent
         variants become equivalent (computed once, loaded by the rest).
         ``share_sigs`` marks signatures sibling sessions also need (the
-        executor force-persists those on lease-compute)."""
+        executor force-persists those on lease-compute). ``cancel``
+        forwards a cooperative cancel flag to the executor (checked
+        between nodes; the run raises
+        :class:`~repro.core.executor.JobCancelled` after settling)."""
         dag = workflow.build()
         sigs = compute_signatures(dag, nonces=nonces)
         ev_before = (self.evictor.stats.snapshot()
@@ -294,6 +299,7 @@ class IterativeSession:
                 dedupe_wait_seconds=self.dedupe_wait_seconds,
                 share_sigs=share_sigs,
                 worker_pool=self.worker_pool,
+                cancel=cancel,
                 # Planner chose COMPUTE although a load existed — loading
                 # is costlier there; the dedupe shortcut must not undo it.
                 dedupe_skip={n for n, s in states.items()

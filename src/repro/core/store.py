@@ -886,14 +886,18 @@ class Store:
                 return None
         return ComputeLease(self, sig, lock, remote_lease=remote_lease)
 
-    def wait_compute(self, sig: str, timeout: float | None = None) -> bool:
+    def wait_compute(self, sig: str, timeout: float | None = None,
+                     cancel: "threading.Event | None" = None) -> bool:
         """Block until the current compute lease on ``sig`` is released.
 
         Registers a waiter marker first, so the lease holder knows the
         result is wanted fleet-wide and force-persists it before releasing.
         Returns False on timeout (the caller should fall back to computing
         the value itself — bounded waits keep the fleet deadlock-free even
-        under pathological cross-session lease chains).
+        under pathological cross-session lease chains). ``cancel`` (a
+        ``threading.Event``) aborts the wait early with False — the
+        executor passes its job cancel flag so a cancelled session never
+        sits out a long lease wait.
 
         With a remote tier, the holder may be on another host: the local
         ``flock`` is then uncontended and the wait continues by polling
@@ -915,12 +919,14 @@ class Store:
                 # fast nodes).
                 remote_waiter = self.remote.register_waiter(sig)
             waiter = FileLock(self._lease_path(sig), shared=True)
-            if not waiter.acquire(timeout=timeout):
+            if not waiter.acquire(timeout=timeout, cancel=cancel):
                 return False
             waiter.release()
+            if cancel is not None and cancel.is_set():
+                return False
             if self.remote is None:
                 return True
-            return self._wait_remote(sig, deadline)
+            return self._wait_remote(sig, deadline, cancel=cancel)
         finally:
             if remote_waiter is not None:
                 remote_waiter.release()
@@ -929,18 +935,21 @@ class Store:
             except OSError:
                 pass
 
-    def _wait_remote(self, sig: str, deadline: float | None) -> bool:
+    def _wait_remote(self, sig: str, deadline: float | None,
+                     cancel: "threading.Event | None" = None) -> bool:
         """Poll a cross-host compute lease until it releases/expires, the
-        entry appears, or the deadline passes (False). The caller
-        (``wait_compute``) holds a remote TTL waiter marker for the
-        duration, so the remote holder knows to force-persist. Probes
-        bypass the marker cache — a stale negative here would send the
-        caller straight into a duplicate compute."""
+        entry appears, or the deadline passes (False) — or ``cancel``
+        fires (False). The caller (``wait_compute``) holds a remote TTL
+        waiter marker for the duration, so the remote holder knows to
+        force-persist. Probes bypass the marker cache — a stale negative
+        here would send the caller straight into a duplicate compute."""
         remote = self.remote
         if remote is None or not remote.available():
             return True   # degraded: behave local-only
         interval = 0.05
         while True:
+            if cancel is not None and cancel.is_set():
+                return False
             if self.has_local(sig):
                 return True
             # Fresh marker probe BEFORE the lease probe: a holder

@@ -6,7 +6,8 @@ across all hosted sessions. See docs/architecture.md for the layer map."""
 from .client import (InProcessClient, ServerClient, ServerError,
                      connect_tcp, connect_unix)
 from .pool import SharedWorkerPool
-from .protocol import ProtocolError, jsonable, recv_msg, send_msg
+from .protocol import (ProtocolError, ServerBusy, jsonable, recv_msg,
+                       send_msg)
 from .scheduler import PrefixScheduler
 from .server import Job, SessionServer, SharedNonces
 
@@ -14,7 +15,7 @@ __all__ = [
     "InProcessClient", "ServerClient", "ServerError",
     "connect_tcp", "connect_unix",
     "SharedWorkerPool",
-    "ProtocolError", "jsonable", "recv_msg", "send_msg",
+    "ProtocolError", "ServerBusy", "jsonable", "recv_msg", "send_msg",
     "PrefixScheduler",
     "Job", "SessionServer", "SharedNonces",
 ]

@@ -7,6 +7,23 @@ identical message handler, so tests exercise the real protocol semantics
 without a socket. Both expose the same methods and return the same
 JSON-shaped dicts.
 
+Hardening (both clients):
+
+* **Backpressure** — a ``busy`` submit response (bounded admission queue
+  full) is retried automatically after the server's ``retry_after`` hint,
+  up to ``busy_retries`` times; then :class:`ServerBusy` propagates.
+* **Bounded RPCs** — ``timeout`` on the connect helpers puts a socket
+  timeout on every send/recv, so a dead or wedged server can never hang a
+  client forever. Long ``wait`` calls are transparently *chunked* into
+  RPCs shorter than the socket timeout (a slow job is not a dead server).
+* **Reconnect** — after any socket error the connection is considered
+  poisoned (a late response would desynchronize the framing); when a
+  reconnect factory is available (the connect helpers install one) the
+  client dials a fresh connection and — only when the request provably
+  never reached the server, or the op is idempotent — retries it once.
+  A ``submit`` that may have been received is never resent (no double
+  submissions); the error propagates instead.
+
 Quickstart::
 
     from repro.serve import SessionServer, connect_unix
@@ -14,7 +31,7 @@ Quickstart::
     server = SessionServer("/data/helix", registry={"census": build})
     path = server.serve_unix("/tmp/helix.sock")
 
-    client = connect_unix(path)
+    client = connect_unix(path, timeout=30.0)
     job = client.submit("census", {"reg": 0.3})
     print(client.wait(job)["outputs"])
     client.close()
@@ -22,9 +39,10 @@ Quickstart::
 from __future__ import annotations
 
 import socket
-from typing import Any, Mapping
+import time
+from typing import Any, Callable, Mapping
 
-from .protocol import recv_msg, send_msg
+from .protocol import ServerBusy, recv_msg, send_msg
 from .server import SessionServer
 
 
@@ -35,19 +53,50 @@ class ServerError(RuntimeError):
 class _ClientBase:
     """Shared convenience methods over the raw ``op`` messages."""
 
+    #: Automatic retries of a ``busy`` submit (bounded admission queue
+    #: full) before :class:`ServerBusy` propagates to the caller.
+    busy_retries: int = 8
+
     def _rpc(self, **msg: Any) -> dict:
         raise NotImplementedError
+
+    @staticmethod
+    def _check(resp: Any) -> dict:
+        """Turn a raw response into a dict or the right exception."""
+        if resp is None:
+            raise ConnectionError("server closed the connection")
+        if not resp.get("ok"):
+            if resp.get("busy"):
+                raise ServerBusy(float(resp.get("retry_after", 0.5)))
+            raise ServerError(resp.get("error", "unknown server error"))
+        return resp
 
     def hello(self) -> dict:
         """Server identity, schedule mode, and registered workflows."""
         return self._rpc(op="hello")
 
     def submit(self, workflow: str, params: Mapping[str, Any]
-               | None = None, name: str | None = None) -> str:
-        """Submit a registered workflow by name; returns the job id."""
-        resp = self._rpc(op="submit", workflow=workflow,
-                         params=dict(params or {}), name=name)
-        return resp["job"]
+               | None = None, name: str | None = None,
+               timeout: float | None = None) -> str:
+        """Submit a registered workflow by name; returns the job id.
+
+        ``timeout`` bounds the job's server-side *running* time (expiry
+        cancels it — status ``cancelled``). A ``busy`` response (bounded
+        admission queue full) is retried after the server's
+        ``retry_after`` hint, ``busy_retries`` times, then raises
+        :class:`~repro.serve.protocol.ServerBusy`."""
+        attempts = 0
+        while True:
+            try:
+                resp = self._rpc(op="submit", workflow=workflow,
+                                 params=dict(params or {}), name=name,
+                                 timeout=timeout)
+                return resp["job"]
+            except ServerBusy as e:
+                attempts += 1
+                if attempts > self.busy_retries:
+                    raise
+                time.sleep(e.retry_after)
 
     def wait(self, job: str, timeout: float | None = None) -> dict:
         """Block until ``job`` finishes; returns its summary dict."""
@@ -56,6 +105,12 @@ class _ClientBase:
     def job(self, job: str) -> dict:
         """Non-blocking job summary."""
         return self._rpc(op="job", job=job)
+
+    def cancel(self, job: str) -> bool:
+        """Stop a queued or running job (cooperative: the executor
+        settles leases/pins/reservations and the job reports status
+        ``cancelled``). False when unknown or already finished."""
+        return bool(self._rpc(op="cancel", job=job)["cancelled"])
 
     def forget(self, job: str) -> bool:
         """Release a finished job's server-side record (frees its
@@ -86,19 +141,90 @@ class ServerClient(_ClientBase):
     clients each open their own (``submit`` returns immediately, so a
     single client can still keep many jobs in flight and ``wait`` on them
     in turn).
+
+    ``timeout`` is the per-RPC socket timeout (applied to the wrapped
+    socket); ``reconnect`` is a zero-arg factory returning a fresh
+    *connected* socket, used to replace a connection after any socket
+    error — see the module docstring for the resend rules. The
+    ``connect_unix`` / ``connect_tcp`` helpers install both.
     """
 
-    def __init__(self, sock: socket.socket):
+    # Ops safe to resend after a connection died mid-RPC: each is a pure
+    # query or naturally idempotent (cancel/forget/drain re-apply to the
+    # same state; "wait" just re-waits). "submit" is deliberately absent.
+    _IDEMPOTENT = frozenset({"hello", "status", "job", "wait", "forget",
+                             "multiplicity", "drain", "cancel",
+                             "shutdown"})
+
+    def __init__(self, sock: socket.socket, *,
+                 timeout: float | None = None,
+                 reconnect: Callable[[], socket.socket] | None = None):
+        """Wrap a connected socket; see the class docstring for knobs."""
         self._sock = sock
+        self.timeout = timeout
+        self._reconnect = reconnect
+        if timeout is not None:
+            self._sock.settimeout(timeout)
 
     def _rpc(self, **msg: Any) -> dict:
-        send_msg(self._sock, msg)
-        resp = recv_msg(self._sock)
-        if resp is None:
-            raise ConnectionError("server closed the connection")
-        if not resp.get("ok"):
-            raise ServerError(resp.get("error", "unknown server error"))
-        return resp
+        return self._check(self._roundtrip(msg))
+
+    def _roundtrip(self, msg: dict) -> Any:
+        """One send/recv, with a single reconnect-and-retry when safe.
+
+        Any socket error poisons the connection (a late reply would
+        desynchronize the frame stream), so it is always replaced; the
+        request is *resent* only when it provably never reached the
+        server (the send itself failed) or the op is idempotent — a
+        ``submit`` that may have landed must error out, not run twice.
+        """
+        sent = False
+        try:
+            send_msg(self._sock, msg)
+            sent = True
+            return recv_msg(self._sock)
+        except OSError:
+            # socket.timeout is an OSError (and TimeoutError) — a recv
+            # timeout lands here too and also poisons the connection.
+            if self._reconnect is None:
+                raise
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = self._reconnect()
+            if self.timeout is not None:
+                self._sock.settimeout(self.timeout)
+            if sent and msg.get("op") not in self._IDEMPOTENT:
+                raise
+            send_msg(self._sock, msg)
+            return recv_msg(self._sock)
+
+    def wait(self, job: str, timeout: float | None = None) -> dict:
+        """Block until ``job`` finishes; returns its summary dict.
+
+        With a socket timeout configured, the wait is chunked into RPCs
+        each shorter than that timeout, so waiting on a long job is
+        indistinguishable from a sequence of quick queries — a slow
+        *job* never trips the dead-*server* detector. The overall
+        ``timeout`` (None = forever) still raises
+        :class:`TimeoutError` exactly like the unchunked call."""
+        if self.timeout is None:
+            return super().wait(job, timeout)
+        chunk = max(0.05, self.timeout * 0.5)
+        deadline = None if timeout is None \
+            else time.monotonic() + timeout
+        while True:
+            left = None if deadline is None \
+                else max(0.0, deadline - time.monotonic())
+            step = chunk if left is None else min(chunk, left)
+            try:
+                return self._rpc(op="wait", job=job, timeout=step)
+            except ServerError as e:
+                if not str(e).startswith("TimeoutError"):
+                    raise
+                if left is not None and left <= chunk:
+                    raise TimeoutError(str(e)) from None
 
     def close(self) -> None:
         """Close the connection (idempotent)."""
@@ -119,18 +245,19 @@ class InProcessClient(_ClientBase):
 
     Routes every call through ``SessionServer._handle`` — the same code
     path socket connections hit — so responses are byte-for-byte what the
-    wire would carry, minus the framing. ``shutdown`` additionally joins
-    the server (sockets get that for free from the connection handler).
+    wire would carry, minus the framing (including the ``busy``
+    backpressure shape, which surfaces as
+    :class:`~repro.serve.protocol.ServerBusy` with the same automatic
+    submit retries). ``shutdown`` additionally joins the server (sockets
+    get that for free from the connection handler).
     """
 
     def __init__(self, server: SessionServer):
+        """Wrap a live server; calls go through its ``_handle``."""
         self._server = server
 
     def _rpc(self, **msg: Any) -> dict:
-        resp = self._server._handle(msg)
-        if not resp.get("ok"):
-            raise ServerError(resp.get("error", "unknown server error"))
-        return resp
+        return self._check(self._server._handle(msg))
 
     def shutdown(self) -> dict:
         """Request shutdown and join the server before returning."""
@@ -142,15 +269,35 @@ class InProcessClient(_ClientBase):
         """No-op (kept for interface parity with ServerClient)."""
 
 
-def connect_unix(path: str) -> ServerClient:
-    """Connect to a session server's unix domain socket."""
-    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-    sock.connect(path)
-    return ServerClient(sock)
+def connect_unix(path: str, *, timeout: float | None = None
+                 ) -> ServerClient:
+    """Connect to a session server's unix domain socket.
+
+    ``timeout`` (seconds) bounds every socket operation and arms the
+    client's reconnect-on-error path; None keeps the legacy blocking
+    behavior."""
+    def dial() -> socket.socket:
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        if timeout is not None:
+            sock.settimeout(timeout)
+        sock.connect(path)
+        return sock
+
+    return ServerClient(dial(), timeout=timeout, reconnect=dial)
 
 
-def connect_tcp(host: str, port: int) -> ServerClient:
-    """Connect to a session server's TCP endpoint."""
-    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-    sock.connect((host, port))
-    return ServerClient(sock)
+def connect_tcp(host: str, port: int, *, timeout: float | None = None
+                ) -> ServerClient:
+    """Connect to a session server's TCP endpoint.
+
+    ``timeout`` (seconds) bounds every socket operation and arms the
+    client's reconnect-on-error path; None keeps the legacy blocking
+    behavior."""
+    def dial() -> socket.socket:
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        if timeout is not None:
+            sock.settimeout(timeout)
+        sock.connect((host, port))
+        return sock
+
+    return ServerClient(dial(), timeout=timeout, reconnect=dial)

@@ -11,9 +11,10 @@ Request messages (``op`` selects the operation)::
 
     {"op": "hello"}
     {"op": "submit", "workflow": <registry name>, "params": {...},
-     "name": <optional job label>}
+     "name": <optional job label>, "timeout": <optional s>}
     {"op": "job",    "job": <job id>}                  # non-blocking status
     {"op": "wait",   "job": <job id>, "timeout": <s>}  # blocks until done
+    {"op": "cancel", "job": <job id>}                  # stop queued/running
     {"op": "forget", "job": <job id>}                  # drop a finished job
     {"op": "status"}
     {"op": "multiplicity", "sig": <signature>}
@@ -26,6 +27,18 @@ with a job summary (status, timings, execution counts, JSON-coerced
 outputs — see :func:`jsonable`). A ``wait`` that times out responds
 ``ok: false`` with a ``TimeoutError:`` message. The server retains the
 last ``max_finished_jobs`` summaries; ``forget`` releases one eagerly.
+
+Backpressure: when the server's admission queue is full (``max_queue``),
+``submit`` responds ``{"ok": false, "busy": true, "retry_after": <s>,
+"error": ...}`` — the request had no effect and should be retried after
+``retry_after`` seconds. :class:`ServerClient` does this automatically
+(bounded by its ``busy_retries``); in-process callers see
+:class:`ServerBusy` raised instead. ``submit``'s optional ``timeout``
+bounds the job's *running* time server-side: on expiry the job's cancel
+flag fires, the executor stops between nodes, and the job reports status
+``cancelled``. ``cancel`` requests the same stop explicitly for a queued
+or running job (``{"ok": true, "cancelled": <bool>}``; False when the
+job is unknown or already finished).
 
 Workflows cross the wire *by registry name*: the server is constructed
 with ``registry={name: factory}`` and the client submits ``(name,
@@ -52,6 +65,22 @@ _INLINE_ARRAY_ELEMS = 64
 
 class ProtocolError(RuntimeError):
     """A malformed or oversized frame was received."""
+
+
+class ServerBusy(RuntimeError):
+    """The server's bounded admission queue is full.
+
+    The submit had no effect; retry after :attr:`retry_after` seconds.
+    Raised by ``SessionServer.submit`` (and the in-process client); on
+    the wire it travels as the ``busy`` response shape documented in the
+    module docstring, and :class:`~repro.serve.client.ServerClient`
+    re-raises it once its automatic retries are exhausted.
+    """
+
+    def __init__(self, retry_after: float = 0.5):
+        super().__init__(
+            f"admission queue full; retry in {retry_after:g}s")
+        self.retry_after = float(retry_after)
 
 
 def send_msg(sock: socket.socket, obj: Any) -> None:

@@ -45,6 +45,7 @@ from typing import Any, Callable, Mapping
 
 from ..core.costs import CostModel
 from ..core.eviction import Evictor
+from ..core.executor import JobCancelled
 from ..core.locking import StorageLedger
 from ..core.omp import Policy
 from ..core.remote import ObjectStore, RemoteStore, as_remote_store
@@ -53,7 +54,7 @@ from ..core.signature import compute_signatures
 from ..core.store import Store
 from ..core.workflow import Workflow
 from .pool import SharedWorkerPool
-from .protocol import jsonable, recv_msg, send_msg
+from .protocol import ServerBusy, jsonable, recv_msg, send_msg
 from .scheduler import PrefixScheduler
 
 
@@ -118,6 +119,15 @@ class Job:
     report: IterationReport | None = None
     error: BaseException | None = None
     done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    # Per-job running-time bound (None = server default). On expiry the
+    # cancel flag below fires and the job finishes as ``cancelled``.
+    timeout: float | None = None
+    # Cooperative cancel flag, threaded through the session into the
+    # executor (checked between nodes and inside lease waits). Set by
+    # SessionServer.cancel, the job-timeout timer, and non-drain
+    # shutdown.
+    cancel_event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
 
     @property
@@ -185,6 +195,26 @@ class SessionServer:
         ``status()`` reports both tiers. A server that *constructed* its
         RemoteStore (str/ObjectStore input) closes it on shutdown; an
         injected instance belongs to the caller.
+    ``max_queue``
+        Bounded admission: queued (not-yet-running) submissions beyond
+        this raise :class:`~repro.serve.protocol.ServerBusy` (the wire
+        ``busy`` response, carrying ``busy_retry_after``) instead of
+        growing the queue without limit. ``None`` (default) keeps the
+        queue unbounded.
+    ``job_timeout``
+        Default per-job running-time bound in seconds: a job running
+        longer has its cancel flag fired and finishes with status
+        ``cancelled``. ``None`` (default) means unbounded; a per-submit
+        ``timeout`` overrides it.
+    ``gc_interval`` / ``gc_min_age``
+        Remote-tier hygiene: with a remote attached, a maintenance
+        thread runs ``remote.gc_orphans(min_age_seconds=gc_min_age)``
+        every ``gc_interval`` seconds, reclaiming data objects whose
+        publisher crashed before the commit marker landed.
+        ``gc_interval=None`` (default) means 900 s when a remote is
+        attached; pass ``0`` to disable. ``gc_min_age`` (default
+        3600 s) is the safety age gate — it must comfortably exceed any
+        plausible upload duration (see ``gc_orphans``).
     """
 
     def __init__(self, workdir: str, *,
@@ -207,7 +237,12 @@ class SessionServer:
                  max_finished_jobs: int = 1024,
                  evict_to_admit: bool = True,
                  remote: RemoteStore | ObjectStore | str | None = None,
-                 nonces: SharedNonces | None = None):
+                 nonces: SharedNonces | None = None,
+                 max_queue: int | None = None,
+                 busy_retry_after: float = 0.5,
+                 job_timeout: float | None = None,
+                 gc_interval: float | None = None,
+                 gc_min_age: float = 3600.0):
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.registry = dict(registry or {})
@@ -223,6 +258,9 @@ class SessionServer:
         self.purge_stale = purge_stale
         self.horizon = 1.0 if horizon is None else float(horizon)
         self.poll_interval = poll_interval
+        self.max_queue = None if max_queue is None else max(1, int(max_queue))
+        self.busy_retry_after = float(busy_retry_after)
+        self.job_timeout = job_timeout
 
         # One store / cost model / ledger / worker pool for every session
         # this server hosts. Reconcile the shared budget ledger with disk
@@ -285,16 +323,51 @@ class SessionServer:
             daemon=True)
         self._dispatcher.start()
 
+        # Remote-tier hygiene: the server owning the workdir is the
+        # natural place to reclaim crash orphans (entry data whose
+        # publisher died before the commit marker) — clients come and
+        # go, the server persists. Age-gated (gc_min_age) so an
+        # in-flight slow upload is never mistaken for a crash.
+        self.gc_min_age = float(gc_min_age)
+        self.gc_interval = (gc_interval if gc_interval is not None
+                            else (900.0 if self.store.remote is not None
+                                  else 0.0))
+        self.gc_stats = {"runs": 0, "reclaimed": 0}
+        self._maint_stop = threading.Event()
+        self._maintenance: threading.Thread | None = None
+        if self.gc_interval and self.store.remote is not None:
+            self._maintenance = threading.Thread(
+                target=self._maintenance_loop, name="helix-serve-maint",
+                daemon=True)
+            self._maintenance.start()
+
+    def _maintenance_loop(self) -> None:
+        """Periodic remote-tier orphan GC (see ``gc_interval``)."""
+        while not self._maint_stop.wait(self.gc_interval):
+            try:
+                n = self.store.remote.gc_orphans(
+                    min_age_seconds=self.gc_min_age)
+            except Exception:
+                continue  # degraded/unreachable tier: try again next tick
+            with self._cv:
+                self.gc_stats["runs"] += 1
+                self.gc_stats["reclaimed"] += int(n)
+
     # -- submission --------------------------------------------------------
     def submit(self, workflow: Workflow | Callable[[], Workflow], *,
-               name: str | None = None) -> Job:
+               name: str | None = None,
+               timeout: float | None = None) -> Job:
         """Submit a workflow (or a zero-arg factory) for execution.
 
         Compiles it immediately — under the server's shared nonce map —
         to learn its signature set, registers those signatures in the
         cross-client multiplicity map, and enqueues the job for the
         global scheduler. Returns the :class:`Job` handle; use
-        :meth:`wait` for the result.
+        :meth:`wait` for the result. ``timeout`` bounds the job's
+        *running* time (default: the server's ``job_timeout``); raises
+        :class:`~repro.serve.protocol.ServerBusy` when the bounded
+        admission queue (``max_queue``) is full — the submission had no
+        effect and is safe to retry.
         """
         wf = workflow if isinstance(workflow, Workflow) else workflow()
         dag = wf.build()
@@ -303,11 +376,16 @@ class SessionServer:
         with self._cv:
             if not self._accepting:
                 raise RuntimeError("server is draining / shut down")
+            if (self.max_queue is not None
+                    and len(self._queue) >= self.max_queue):
+                raise ServerBusy(self.busy_retry_after)
             self._seq += 1
             job = Job(id=f"j{self._seq}-{uuid.uuid4().hex[:8]}",
                       name=name or wf.name or f"job{self._seq}",
                       workflow=wf, sigs=sigs, seq=self._seq,
-                      submitted_at=time.perf_counter())
+                      submitted_at=time.perf_counter(),
+                      timeout=timeout if timeout is not None
+                      else self.job_timeout)
             self._jobs[job.id] = job
             self._queue.append(job)
             self.scheduler.add(job)
@@ -315,7 +393,8 @@ class SessionServer:
         return job
 
     def submit_named(self, workflow: str, params: Mapping[str, Any]
-                     | None = None, *, name: str | None = None) -> Job:
+                     | None = None, *, name: str | None = None,
+                     timeout: float | None = None) -> Job:
         """Submit a registered workflow by name (the RPC path)."""
         if workflow not in self.registry:
             known = ", ".join(sorted(self.registry)) or "none"
@@ -323,7 +402,39 @@ class SessionServer:
                 f"unknown workflow {workflow!r}; registered: {known}")
         factory = self.registry[workflow]
         wf = factory(**dict(params or {}))
-        return self.submit(wf, name=name or workflow)
+        return self.submit(wf, name=name or workflow, timeout=timeout)
+
+    def cancel(self, job: Job | str,
+               reason: str = "cancelled by request") -> bool:
+        """Stop a queued or running job.
+
+        Queued jobs leave the queue immediately and finish as
+        ``cancelled``. Running jobs get their cancel flag set: the
+        executor stops between nodes, releases leases/pins/reservations
+        through the normal settle path, and the job finishes as
+        ``cancelled`` shortly after. Returns False when the job is
+        unknown or already finished (idempotent)."""
+        job_id = job.id if isinstance(job, Job) else str(job)
+        with self._cv:
+            j = self._jobs.get(job_id)
+            if j is None or j.done.is_set():
+                return False
+            try:
+                self._queue.remove(j)
+            except ValueError:
+                pass  # dispatched (or dispatching): flag it instead
+            else:
+                j.status = "cancelled"
+                j.error = JobCancelled(reason)
+                j.dispatched_at = time.perf_counter()
+                j.finished_at = j.dispatched_at
+                self.scheduler.remove(j)
+                self._retain_finished_locked(j)
+                self._cv.notify_all()
+                j.done.set()
+                return True
+            j.cancel_event.set()
+            return True
 
     def share_across(self, sigs) -> None:
         """Mark signatures sibling *hosts* also need (multi-host mode).
@@ -385,6 +496,10 @@ class SessionServer:
                 "queued": len(self._queue),
                 "running": len(self._running),
                 "total_jobs": len(self._jobs),
+                "cancelled": sum(1 for j in self._jobs.values()
+                                 if j.status == "cancelled"),
+                "max_queue": self.max_queue,
+                "gc": dict(self.gc_stats),
                 "pool": self.pool.stats(),
                 "eviction": (self.evictor.stats.snapshot()
                              if self.evictor is not None else None),
@@ -468,6 +583,13 @@ class SessionServer:
 
     def _run_job(self, job: Job) -> None:
         t0 = time.perf_counter()
+        timer: threading.Timer | None = None
+        if job.timeout is not None:
+            # Per-submission running-time bound: expiry just fires the
+            # same cooperative cancel flag an explicit cancel() uses.
+            timer = threading.Timer(job.timeout, job.cancel_event.set)
+            timer.daemon = True
+            timer.start()
         try:
             sess = IterativeSession(
                 self.workdir, policy=self.policy,
@@ -492,12 +614,21 @@ class SessionServer:
                               if self.scheduler.mode == "prefix"
                               else None))
             job.report = sess.run(job.workflow, nonces=self.nonces,
-                                  share_sigs=self._share_view)
+                                  share_sigs=self._share_view,
+                                  cancel=job.cancel_event)
             job.status = "done"
+        except JobCancelled as e:
+            # Requested stop (cancel RPC / job timeout / non-drain
+            # shutdown), not a failure: the executor already settled
+            # leases, pins, and reservations on the way out.
+            job.error = e
+            job.status = "cancelled"
         except BaseException as e:
             job.error = e
             job.status = "error"
         finally:
+            if timer is not None:
+                timer.cancel()
             job.run_seconds = time.perf_counter() - t0
             job.finished_at = time.perf_counter()  # same base as the
             # submitted_at/dispatched_at stamps, so deltas are meaningful
@@ -556,19 +687,22 @@ class SessionServer:
     def shutdown(self, drain: bool = True,
                  timeout: float | None = None) -> None:
         """Stop the server. ``drain=True`` (default) finishes submitted
-        work first (graceful); ``drain=False`` cancels queued jobs and
-        waits only for the currently running ones. Idempotent."""
+        work first (graceful); ``drain=False`` cancels queued *and
+        running* jobs — running ones stop cooperatively between nodes
+        (leases/pins/reservations released) and report status
+        ``cancelled``, not ``error``. Idempotent."""
         with self._cv:
             if self._shutdown_started:
                 return
             self._shutdown_started = True
             self._accepting = False
+        self._maint_stop.set()
         if drain:
             self.drain(timeout)
         with self._cv:
             for job in self._queue:
                 job.status = "cancelled"
-                job.error = RuntimeError("server shut down")
+                job.error = JobCancelled("server shut down")
                 # Freeze queued_seconds at cancellation time (it is
                 # computed against "now" while dispatched_at is unset).
                 job.dispatched_at = time.perf_counter()
@@ -576,6 +710,13 @@ class SessionServer:
                 self.scheduler.remove(job)
                 job.done.set()
             self._queue.clear()
+            if not drain:
+                # Non-drain shutdown must not wait an unbounded compute
+                # out: fire every running job's cancel flag; the pool
+                # join below then returns as soon as each executor
+                # reaches its next between-nodes check.
+                for job in self._running.values():
+                    job.cancel_event.set()
             self._stop = True
             self._cv.notify_all()
         self._dispatcher.join(timeout=30.0)
@@ -725,10 +866,21 @@ class SessionServer:
                         "schedule": self.scheduler.mode,
                         "workflows": sorted(self.registry)}
             if op == "submit":
-                job = self.submit_named(msg.get("workflow", ""),
-                                        msg.get("params"),
-                                        name=msg.get("name"))
+                try:
+                    job = self.submit_named(msg.get("workflow", ""),
+                                            msg.get("params"),
+                                            name=msg.get("name"),
+                                            timeout=msg.get("timeout"))
+                except ServerBusy as e:
+                    # Backpressure, not failure: the submit had no
+                    # effect; the client should retry after the hint.
+                    return {"ok": False, "busy": True,
+                            "retry_after": e.retry_after,
+                            "error": str(e)}
                 return {"ok": True, "job": job.id, "name": job.name}
+            if op == "cancel":
+                return {"ok": True,
+                        "cancelled": self.cancel(str(msg.get("job", "")))}
             if op in ("job", "wait"):
                 job_id = msg.get("job")
                 if job_id not in self._jobs:

@@ -1,0 +1,607 @@
+"""Fault-injection recovery suite (ISSUE 6).
+
+Drives the chaos harness (``repro.core.faults``) against the fleet
+substrate and asserts the failure-recovery invariants:
+
+* transient backend errors are retried in place (tier never degrades);
+  permanent errors degrade to local-only with a cooldown re-probe and an
+  escalating window, then *recover*;
+* a publish crashed between "value uploaded" and "marker uploaded" is
+  invisible to every reader and reclaimed by ``gc_orphans`` (age-gated);
+* lease takeover after a holder crash: the TTL expires, a waiter takes
+  over via conditional put, each shared signature is computed at most
+  twice fleet-wide, the duplicate publish is idempotent and
+  bit-identical, and the budget ledger matches on-disk bytes;
+* a combined latency + transient-failure storm leaves ``run_sweep``
+  outputs bit-identical to a fault-free run (and finishes — no
+  deadlocks);
+* server hardening: cancellation of running jobs (explicit, timeout, and
+  non-drain shutdown) releases leases/reservations and reports
+  ``cancelled``; the bounded admission queue answers ``busy`` with a
+  retry-after the client honors; socket clients never hang (timeouts +
+  chunked waits + reconnect).
+
+Seed: ``HELIX_CHAOS_SEED`` (default 1234) drives every ``FaultPlan``;
+the CI chaos job runs once with the fixed seed and once randomized,
+printing the seed so failures reproduce.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import IterativeSession, compute_signatures
+from repro.core.executor import JobCancelled
+from repro.core.faults import ChaosObjectStore, FaultPlan, InjectedCrash
+from repro.core.locking import HAVE_FLOCK, StorageLedger
+from repro.core.remote import (FsObjectStore, RemoteStore,
+                               TransientBackendError)
+from repro.core.store import Store
+from repro.core.sweep import SweepVariant, run_sweep
+from repro.core.workflow import Workflow
+from repro.serve import InProcessClient, ServerBusy, connect_unix
+from repro.serve.server import SessionServer
+
+pytestmark = pytest.mark.skipif(
+    not HAVE_FLOCK, reason="fleet mode needs POSIX flock")
+
+CHAOS_SEED = int(os.environ.get("HELIX_CHAOS_SEED", "1234"))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _announce_seed():
+    # Printed (with -q too, on failure) so a randomized CI run is
+    # reproducible: HELIX_CHAOS_SEED=<seed> pytest tests/test_faults.py
+    print(f"\n[chaos] HELIX_CHAOS_SEED={CHAOS_SEED}")
+    yield
+
+
+def _bucket(tmp_path, name="bucket") -> FsObjectStore:
+    return FsObjectStore(str(tmp_path / name))
+
+
+def _value(seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((32, 16)),
+            "idx": np.arange(64, dtype=np.int32)}
+
+
+# -- the harness itself ------------------------------------------------------
+
+def test_fault_plan_is_deterministic_and_logged(tmp_path):
+    """Same seed + same call order → same injected faults; the fired
+    log records every one of them."""
+    def drive(plan):
+        chaos = ChaosObjectStore(_bucket(tmp_path, f"b{plan.seed}"), plan)
+        outcomes = []
+        for i in range(60):
+            try:
+                chaos.put(f"k/{i}", b"x")
+                outcomes.append("ok")
+            except TransientBackendError:
+                outcomes.append("err")
+        return outcomes
+
+    a = drive(FaultPlan(seed=CHAOS_SEED).fail_rate("put", 0.3, times=5))
+    b = drive(FaultPlan(seed=CHAOS_SEED).fail_rate("put", 0.3, times=5))
+    assert a == b
+    assert a.count("err") == 5
+
+    plan = FaultPlan(seed=CHAOS_SEED).fail_nth(
+        "put", 2, key_substr="entries/")
+    chaos = ChaosObjectStore(_bucket(tmp_path, "blog"), plan)
+    chaos.put("leases/x", b"1")        # wrong key: not a match
+    chaos.put("entries/a", b"1")       # 1st match: passes
+    with pytest.raises(TransientBackendError):
+        chaos.put("entries/b", b"1")   # 2nd match: fires
+    chaos.put("entries/b", b"1")       # rule exhausted
+    assert ("error", "put", "entries/b", "TransientBackendError") \
+        in plan.fired
+
+
+def test_injected_faults_fire_before_side_effects(tmp_path):
+    """A failed op leaves the backend untouched — injected errors have
+    connection-refused semantics, so retrying them is always safe."""
+    plan = FaultPlan(seed=CHAOS_SEED).fail_nth("put", 1)
+    backend = _bucket(tmp_path)
+    chaos = ChaosObjectStore(backend, plan)
+    with pytest.raises(TransientBackendError):
+        chaos.put("a/b", b"v1")
+    assert backend.get("a/b") is None      # no partial write
+    chaos.put("a/b", b"v1")                # the retry lands cleanly
+    assert backend.get("a/b") == b"v1"
+
+
+# -- retry / degrade / recover ----------------------------------------------
+
+def test_transient_errors_retried_in_place_without_degrading(tmp_path):
+    """Transient failures are absorbed by backoff+jitter retries inside
+    the tier; the operation succeeds and the tier never degrades."""
+    plan = FaultPlan(seed=CHAOS_SEED).fail_nth("put", 1, times=2)
+    remote = RemoteStore(ChaosObjectStore(_bucket(tmp_path), plan),
+                         faults=plan, heartbeats=False,
+                         retry_backoff=0.01)
+    try:
+        remote.objects.put("entries/x/a", b"payload")  # 2 retries inside
+        assert remote.objects.get("entries/x/a") == b"payload"
+        assert remote.stats.n_retries == 2
+        assert remote.stats.n_errors == 0
+        assert remote.available()
+    finally:
+        remote.close()
+
+
+def test_permanent_error_degrades_reprobes_and_recovers(tmp_path):
+    """A permanent backend error degrades the tier for a cooldown, then
+    a health re-probe recovers it; a failing probe escalates the next
+    window instead of recovering."""
+    plan = FaultPlan(seed=CHAOS_SEED)
+    remote = RemoteStore(ChaosObjectStore(_bucket(tmp_path), plan),
+                         faults=plan, heartbeats=False,
+                         degrade_seconds=0.4)
+    try:
+        assert remote.degrade_max_seconds == pytest.approx(8 * 0.4)
+        plan.fail_nth("get", 1, error="permanent")
+        assert remote.marker_meta("zz99", fresh=True) is None  # trips it
+        assert remote.stats.n_errors == 1
+        assert not remote.available()          # inside the window
+        time.sleep(0.5)
+        assert remote.available()              # probe passed → recovered
+        assert remote.stats.n_recoveries == 1
+
+        # Degrade again, and this time fail the health probe too: the
+        # tier must re-degrade with a doubled window, not flap back up.
+        plan.fail_nth("get", 1, error="permanent")
+        plan.fail_nth("exists", 1, error="permanent",
+                      key_substr="health/")
+        assert remote.marker_meta("zz99", fresh=True) is None
+        time.sleep(0.5)
+        assert not remote.available()          # probe failed
+        assert remote._degrade_streak == 2     # escalated
+        time.sleep(0.9)                       # doubled window passes
+        assert remote.available()
+        assert remote.stats.n_recoveries == 2
+    finally:
+        remote.close()
+
+
+# -- torn publishes and orphan GC --------------------------------------------
+
+def test_crash_between_value_and_marker_is_invisible_then_gc(tmp_path):
+    """The tentpole crash window: every data object uploaded, marker
+    not. Readers must see nothing; gc_orphans reclaims the bytes; the
+    retried upload then commits normally."""
+    plan = FaultPlan(seed=CHAOS_SEED).crash_at("upload:before_marker")
+    backend = _bucket(tmp_path)
+    remote = RemoteStore(backend, faults=plan, heartbeats=False)
+    store = Store(str(tmp_path / "host" / "store"), remote=remote)
+    info = store.save("ab12", "node", _value(3))
+    with pytest.raises(InjectedCrash):
+        store.upload_now("ab12")      # dies after the data, pre-marker
+
+    # Invisible: no marker, so a fresh reader sees no entry — but the
+    # orphaned data objects really are in the bucket.
+    reader = RemoteStore(backend, heartbeats=False)
+    assert not reader.exists("ab12")
+    orphans = [k for k in backend.list("entries/ab12/")]
+    assert orphans and not any(k.endswith(".complete") for k in orphans)
+
+    # Age-gated: young objects are spared (maybe an upload in flight) …
+    assert reader.gc_orphans(min_age_seconds=3600.0) == 0
+    assert backend.list("entries/ab12/")
+    # … old ones are reclaimed, and the ledger of record (total_bytes)
+    # never counted them (uncommitted = nonexistent).
+    assert reader.total_bytes(fresh=True) == 0
+    assert reader.gc_orphans(min_age_seconds=0.0) == len(orphans)
+    assert backend.list("entries/ab12/") == []
+
+    # The crashed host retries (crash point disarmed): clean commit.
+    assert store.upload_now("ab12")
+    assert reader.marker_meta("ab12", fresh=True)["nbytes"] == info.nbytes
+    reader.close()
+    remote.close()
+
+
+def test_interrupted_delete_leaves_only_invisible_orphans(tmp_path):
+    """A delete crashed after the marker removal un-published the entry
+    atomically; the leftover data objects are gc_orphans fodder."""
+    plan = FaultPlan(seed=CHAOS_SEED).crash_at("delete:after_marker")
+    backend = _bucket(tmp_path)
+    remote = RemoteStore(backend, faults=plan, heartbeats=False)
+    store = Store(str(tmp_path / "host" / "store"), remote=remote)
+    store.save("cd34", "node", _value(4))
+    assert store.upload_now("cd34")
+    assert remote.exists("cd34")
+
+    with pytest.raises(InjectedCrash):
+        remote.delete_entry("cd34")
+    reader = RemoteStore(backend, heartbeats=False)
+    assert not reader.exists("cd34")               # un-published
+    assert backend.list("entries/cd34/")           # data left behind
+    assert reader.gc_orphans(min_age_seconds=0.0) > 0
+    assert backend.list("entries/cd34/") == []
+    reader.close()
+    remote.close()
+
+
+# -- lease takeover after a crash --------------------------------------------
+
+def _shared_workflow(tag: str, calls: dict, lock: threading.Lock):
+    """src → feat (shared, counted) → per-tag tail."""
+    def count(name):
+        with lock:
+            calls[name] = calls.get(name, 0) + 1
+
+    wf = Workflow("takeover")
+    src = wf.source(
+        "src", lambda: (count("src"),
+                        np.arange(512, dtype=np.float64))[1],
+        config="v1")
+
+    def featurize(x):
+        count("feat")
+        return np.tanh(x.reshape(16, 32) @ x.reshape(32, 16))
+
+    feat = wf.extractor("feat", featurize, [src], config="v1")
+    out = wf.reducer(
+        "out", lambda z, t=tag: {"score": float(np.sum(z)), "tag": t},
+        [feat], config=("tail", tag))
+    wf.output(out)
+    return wf
+
+
+def test_lease_takeover_compute_at_most_twice_and_idempotent(tmp_path):
+    """Satellite 3 + tentpole invariant. A holder crashes mid-compute
+    (heartbeat never renews): the TTL lease expires, the waiting host
+    takes over via conditional put and computes; fleet-wide each shared
+    signature is computed at most twice (crashed + taker). When the
+    crashed host resurfaces and publishes its duplicate, the publish is
+    idempotent — one committed entry, bit-identical — and the taker's
+    budget ledger matches its on-disk bytes."""
+    backend = _bucket(tmp_path)
+    calls: dict = {}
+    lock = threading.Lock()
+    sigs = compute_signatures(_shared_workflow("h", {}, lock).build())
+    shared_sig = sigs["feat"]
+
+    # Host A: takes the fleet compute lease, then "crashes" — its
+    # heartbeats never run, so the lease object silently expires.
+    crashed_remote = RemoteStore(backend, lease_ttl=0.4, heartbeats=False)
+    crashed_store = Store(str(tmp_path / "crashed" / "store"),
+                          remote=crashed_remote)
+    held = crashed_store.acquire_compute(shared_sig)
+    assert held is not None
+
+    # Host B: a full session with in-flight dedupe. Its dedupe loop
+    # waits on the lease, sees it expire, takes over, computes once.
+    store_b = Store(str(tmp_path / "hostB" / "store"),
+                    remote=RemoteStore(backend, lease_ttl=0.4))
+    sess_b = IterativeSession(str(tmp_path / "hostB"),
+                              dedupe_inflight=True, shared_budget=True,
+                              dedupe_wait_seconds=30.0, store=store_b)
+    t0 = time.monotonic()
+    report = sess_b.run(_shared_workflow("b", calls, lock),
+                        share_sigs=frozenset([shared_sig]))
+    assert time.monotonic() - t0 < 30.0       # takeover, not timeout
+    store_b.writer_drain()
+    assert calls["feat"] == 1                 # taker computed it once
+    assert report.outputs["out"]["tag"] == "b"
+    taker_value, _ = store_b.load(shared_sig)
+    reader = RemoteStore(backend, heartbeats=False)
+    assert reader.exists(shared_sig)          # published for the fleet
+
+    # The crashed host resurfaces: it finishes its duplicate compute
+    # (fleet-wide total now 2 — "at most twice") and publishes. The
+    # marker-exists check makes that a no-op: still one entry,
+    # bit-identical to the taker's.
+    calls_a: dict = {}
+    wf_a = _shared_workflow("a", calls_a, lock)
+    dup_value = wf_a.build().nodes["feat"].fn(
+        wf_a.build().nodes["src"].fn())
+    crashed_store.save(shared_sig, "feat", dup_value)
+    assert crashed_store.upload_now(shared_sig)   # idempotent: marker won
+    meta = reader.marker_meta(shared_sig, fresh=True)
+    markers = [k for k in backend.list(f"entries/{shared_sig}/")
+               if k.endswith(".complete")]
+    assert len(markers) == 1
+    np.testing.assert_array_equal(taker_value, dup_value)
+
+    # Ledger == on-disk bytes on the surviving host after the storm.
+    assert StorageLedger(store_b.ledger_path).used() \
+        == pytest.approx(float(store_b.total_bytes()))
+    assert meta["nbytes"] > 0
+    held.release()
+    reader.close()
+    crashed_remote.close()
+    store_b.remote.close()
+
+
+def test_dropped_heartbeats_expire_lease_under_live_holder(tmp_path):
+    """A GC-paused holder (scripted heartbeat drops) loses the lease:
+    the sibling acquires after the TTL even though the holder process
+    is still alive."""
+    backend = _bucket(tmp_path)
+    plan = FaultPlan(seed=CHAOS_SEED).drop_heartbeats(50)
+    holder = RemoteStore(backend, lease_ttl=0.3, faults=plan)
+    sibling = RemoteStore(backend, lease_ttl=0.3, heartbeats=False)
+    try:
+        lease = holder.acquire_compute("ee55")
+        assert lease is not None
+        assert sibling.acquire_compute("ee55") is None   # live at first
+        deadline = time.monotonic() + 5.0
+        taken = None
+        while taken is None and time.monotonic() < deadline:
+            time.sleep(0.1)
+            taken = sibling.acquire_compute("ee55")
+        assert taken is not None, "dropped heartbeats never expired lease"
+        assert ("heartbeat_drop",) in plan.fired
+        taken.release()
+        lease.release()       # stale release is harmless (lease.lost)
+    finally:
+        sibling.close()
+        holder.close()
+
+
+# -- fault storm: end-to-end equivalence -------------------------------------
+
+def _storm_variants(k=3):
+    lock = threading.Lock()
+    return [SweepVariant(name=f"v{i}",
+                         build=(lambda t=f"v{i}": _shared_workflow(
+                             t, {}, lock)))
+            for i in range(k)]
+
+
+def test_fault_storm_sweep_bit_identical_to_fault_free(tmp_path):
+    """Acceptance: a 2-host sweep under a combined latency + transient
+    failure storm completes (no hangs), errors nothing, and produces
+    outputs bit-identical to the fault-free run — the retry/degrade
+    machinery is invisible to results. Ledgers match disk on each host
+    afterwards (no reservation leaks under injected failures)."""
+    clean = run_sweep(str(tmp_path / "clean"), _storm_variants(),
+                      n_hosts=2, remote=str(tmp_path / "clean_bucket"))
+    clean.raise_errors()
+
+    plan = (FaultPlan(seed=CHAOS_SEED)
+            .fail_rate(None, 0.05, error="transient", times=200)
+            .add_latency("put", 0.002, jitter=0.002)
+            .add_latency("get", 0.002, jitter=0.002))
+    stormy_remote = RemoteStore(
+        ChaosObjectStore(_bucket(tmp_path, "storm_bucket"), plan),
+        faults=plan, retry_backoff=0.01)
+    storm = run_sweep(str(tmp_path / "storm"), _storm_variants(),
+                      n_hosts=2, remote=stormy_remote)
+    storm.raise_errors()
+    assert storm.outputs == clean.outputs
+    assert plan.fired, "the storm plan never injected anything"
+
+    for host in ("host0", "host1"):
+        root = str(tmp_path / "storm" / host / "store")
+        store = Store(root)
+        ledger = StorageLedger(store.ledger_path)
+        assert ledger.used() == pytest.approx(float(store.total_bytes()))
+    stormy_remote.close()
+
+
+# -- server hardening: cancellation, timeout, backpressure -------------------
+
+def _chain_registry(n=24, delay=0.08):
+    """A registry whose one workflow is an n-node sleeping chain —
+    long enough to cancel mid-run, with plenty of between-node checks.
+    ``tag`` shifts every signature, so a resubmission with a fresh tag
+    really recomputes instead of loading the previous run's entries."""
+    def build(tag="t0"):
+        wf = Workflow("chain")
+        prev = wf.source("n0", lambda: np.float64(1.0),
+                         config=("v1", tag))
+        for i in range(1, n):
+            prev = wf.extractor(
+                f"n{i}",
+                lambda x, d=delay: (time.sleep(d), x + 1.0)[1],
+                [prev], config=("v1", tag))
+        out = wf.reducer("out", lambda x: {"v": float(x)}, [prev],
+                         config=("tail", tag))
+        wf.output(out)
+        return wf
+    return {"chain": build}
+
+
+def _wait_status(job, status, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while job.status != status and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert job.status == status, f"job stuck in {job.status!r}"
+
+
+def test_cancel_running_job_releases_everything(tmp_path):
+    """Cancelling a running job stops it between nodes with status
+    ``cancelled`` (not ``error``), drops every lease, keeps the ledger
+    honest, and leaves the server healthy for the next submission."""
+    server = SessionServer(str(tmp_path / "srv"),
+                           registry=_chain_registry(), n_sessions=2,
+                           storage_budget_bytes=float(10 * 2 ** 20))
+    try:
+        job = server.submit_named("chain")
+        _wait_status(job, "running")
+        time.sleep(0.2)                      # let a few nodes finish
+        assert server.cancel(job.id) is True
+        server.wait(job, timeout=15.0)
+        assert job.status == "cancelled"
+        assert isinstance(job.error, JobCancelled)
+        assert server.cancel(job.id) is False     # idempotent: finished
+        assert server.job_summary(job)["status"] == "cancelled"
+        assert server.status()["cancelled"] == 1
+
+        counts = server.store.lease_counts()
+        assert counts == {"compute": 0, "pins": 0, "waiters": 0}
+        assert StorageLedger(server.store.ledger_path).used() \
+            == pytest.approx(float(server.store.total_bytes()))
+
+        # The server is not poisoned: the same workflow now completes
+        # (and reuses whatever prefix the cancelled run materialized).
+        job2 = server.submit_named("chain")
+        server.wait(job2, timeout=60.0)
+        assert job2.status == "done"
+    finally:
+        server.shutdown()
+
+
+def test_cancel_queued_job_never_runs(tmp_path):
+    server = SessionServer(str(tmp_path / "srv"),
+                           registry=_chain_registry(), n_sessions=1)
+    try:
+        running = server.submit_named("chain")
+        _wait_status(running, "running")
+        queued = server.submit_named("chain")
+        assert queued.status == "queued"
+        assert server.cancel(queued.id) is True
+        assert queued.status == "cancelled"
+        assert queued.done.is_set()
+        server.cancel(running.id)
+        server.wait(running, timeout=15.0)
+    finally:
+        server.shutdown()
+
+
+def test_job_timeout_reports_cancelled(tmp_path):
+    """A per-submission timeout fires the cancel flag server-side: the
+    job stops between nodes and reports ``cancelled``."""
+    server = SessionServer(str(tmp_path / "srv"),
+                           registry=_chain_registry(n=40, delay=0.1),
+                           n_sessions=1)
+    try:
+        job = server.submit_named("chain", timeout=0.4)
+        server.wait(job, timeout=20.0)
+        assert job.status == "cancelled"
+        assert isinstance(job.error, JobCancelled)
+        assert job.run_seconds < 15.0
+    finally:
+        server.shutdown()
+
+
+def test_shutdown_nodrain_cancels_running_jobs(tmp_path):
+    """Satellite 1: shutdown(drain=False) stops *running* jobs through
+    the cancel flag — promptly, and reported as cancelled."""
+    server = SessionServer(str(tmp_path / "srv"),
+                           registry=_chain_registry(n=60, delay=0.1),
+                           n_sessions=2)
+    running = server.submit_named("chain")
+    queued_behind = [server.submit_named("chain") for _ in range(3)]
+    _wait_status(running, "running")
+    t0 = time.monotonic()
+    server.shutdown(drain=False)
+    assert time.monotonic() - t0 < 20.0          # did not sit out 6 s/job
+    assert running.status == "cancelled"
+    assert isinstance(running.error, JobCancelled)
+    for j in queued_behind:
+        assert j.status == "cancelled"
+        assert j.done.is_set()
+
+
+def test_bounded_queue_busy_and_client_retry(tmp_path):
+    """Backpressure: a full admission queue answers busy-with-retry-
+    after; the client retries automatically and lands the submit once a
+    slot frees."""
+    server = SessionServer(str(tmp_path / "srv"),
+                           registry=_chain_registry(n=10, delay=0.05),
+                           n_sessions=1, max_queue=1,
+                           busy_retry_after=0.05)
+    try:
+        first = server.submit_named("chain")
+        _wait_status(first, "running")
+        server.submit_named("chain")             # fills the queue
+        with pytest.raises(ServerBusy) as exc:
+            server.submit_named("chain")         # bounced
+        assert exc.value.retry_after == pytest.approx(0.05)
+        assert server.status()["max_queue"] == 1
+
+        # The wire shape: ok=false + busy=true + retry_after; the client
+        # turns it into automatic retries that eventually succeed.
+        client = InProcessClient(server)
+        client.busy_retries = 200
+        job_id = client.submit("chain")          # blocks through busy
+        assert client.wait(job_id, timeout=60.0)["status"] == "done"
+    finally:
+        server.shutdown()
+
+
+def test_socket_client_timeouts_chunked_wait_and_cancel(tmp_path):
+    """A socket client with a short RPC timeout survives a job that
+    runs much longer than the timeout (chunked waits), cancels jobs
+    over the wire, and never hangs on a shut-down server."""
+    server = SessionServer(str(tmp_path / "srv"),
+                           registry=_chain_registry(n=14, delay=0.1),
+                           n_sessions=1)
+    path = server.serve_unix(str(tmp_path / "helix.sock"))
+    client = connect_unix(path, timeout=0.5)
+    try:
+        job = client.submit("chain")
+        summary = client.wait(job)               # ~1.4 s ≫ 0.5 s timeout
+        assert summary["status"] == "done"
+        assert summary["outputs"]["out"]["v"] == 14.0
+
+        # Fresh tags below: same-tag resubmissions would load the first
+        # run's materializations and finish instantly.
+        job2 = client.submit("chain", {"tag": "doomed"}, name="doomed")
+        assert client.cancel(job2) is True
+        assert client.wait(job2, timeout=30.0)["status"] == "cancelled"
+        assert client.cancel(job2) is False      # already finished
+
+        # A wait whose overall deadline expires raises TimeoutError on
+        # the client — distinct from the ServerError a dead job gives.
+        job3 = client.submit("chain", {"tag": "slow"})
+        with pytest.raises(TimeoutError):
+            client.wait(job3, timeout=0.2)
+        assert client.cancel(job3) is True
+        assert client.wait(job3, timeout=30.0)["status"] == "cancelled"
+        client.shutdown()
+    finally:
+        client.close()
+        server.shutdown()
+
+
+def test_gc_orphans_scheduled_by_owning_server(tmp_path):
+    """Satellite 2: the server's maintenance thread runs gc_orphans
+    periodically with the min-age guard; crash orphans disappear
+    without any client asking."""
+    backend = _bucket(tmp_path)
+    backend.put("entries/dead01/w.npy", b"x" * 128)   # crashed publish
+    backend.put("entries/dead01/meta.json", b"{}")
+    server = SessionServer(str(tmp_path / "srv"),
+                           remote=RemoteStore(backend, heartbeats=False),
+                           gc_interval=0.1, gc_min_age=0.0)
+    try:
+        deadline = time.monotonic() + 10.0
+        while backend.list("entries/dead01/") \
+                and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert backend.list("entries/dead01/") == []
+        status = server.status()
+        assert status["gc"]["runs"] >= 1
+        assert status["gc"]["reclaimed"] >= 2
+    finally:
+        server.shutdown()
+        server.store.remote.close()
+
+
+def test_gc_disabled_without_remote_or_interval(tmp_path):
+    """No remote tier (or gc_interval=0) → no maintenance thread."""
+    local_only = SessionServer(str(tmp_path / "a"))
+    disabled = SessionServer(str(tmp_path / "b"),
+                             remote=str(tmp_path / "bucket"),
+                             gc_interval=0)
+    try:
+        assert local_only._maintenance is None
+        assert local_only.gc_interval == 0.0
+        assert disabled._maintenance is None
+        # default interval documented at 900 s when a remote exists
+        with_remote = SessionServer(str(tmp_path / "c"),
+                                    remote=str(tmp_path / "bucket2"))
+        assert with_remote.gc_interval == 900.0
+        assert with_remote._maintenance is not None
+        with_remote.shutdown()
+    finally:
+        disabled.shutdown()
+        local_only.shutdown()
