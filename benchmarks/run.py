@@ -31,6 +31,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
       the census grid: a 2-host sweep warms the tier (fleet compute-once
       must hold across hosts), then a fresh "host" runs the same grid
       against the warm tier vs. an empty one.
+  bench_search_reuse        — ISSUE 7: the reuse-aware SearchDriver vs a
+      fixed-batch FIFO sweep at equal arm count on the census grid (the
+      tuner's marginal-cost frontier must compute measurably fewer
+      nodes), plus a successive-halving run whose early-stopped arms
+      must leave zero ledger drift and zero wasted recomputes.
 
 Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list),
 HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine),
@@ -544,6 +549,141 @@ def bench_remote_reuse() -> None:
           f"evict_leased={evict_leased};evict_vetoed={veto}", flush=True)
 
 
+def bench_search_reuse() -> None:
+    """ISSUE 7: reuse-aware search vs fixed-batch FIFO, equal arm count.
+
+    Phase 1 — **frontier ordering**. The candidate grid is learner-reg ×
+    PPR-threshold, enumerated reg-fastest, so consecutive candidates
+    *differ* in the expensive knob: a fixed batch of the first K arms
+    (``run_sweep``, fifo schedule — the pre-ISSUE-7 workflow of a user
+    hand-picking K arms in grid order) trains K distinct models. The
+    SearchDriver gets the same budget of K arms over the *whole* grid
+    and orders its frontier by the server's marginal-cost estimates:
+    after each arm it re-prices the remaining candidates against the
+    live store, stays signature-adjacent (same reg, different
+    threshold), and trains ~K/2 models. At equal arm count the tuner
+    must perform measurably less distinct work: fewer unique signatures
+    computed (``saved_sigs`` > 0 — the content-addressed measure; raw
+    node-compute counts also reported, but at smoke scale they include
+    the planner's deliberate recompute-cheaper-than-load choices on
+    tiny extractors) and fewer models trained, with zero wasted
+    recomputes.
+
+    Phase 2 — **successive halving**. Four regs race over
+    ``train_iters`` levels [iters/5, iters] at eta=2 in eager (ASHA)
+    mode: the first two finishers of rung 0 promote and the stragglers
+    are cancelled mid-run through the server's cooperative-cancel path.
+    The row reports ``ledger_drift_b`` (shared ledger minus on-disk
+    bytes after the run — must be 0: early-stopped arms released every
+    reservation) and ``wasted`` (blind duplicate computes — must be 0).
+    """
+    from repro.core import StorageLedger, SweepVariant, run_sweep
+    from repro.core.config import EngineConfig
+    from repro.core.search import (HalvingConfig, SearchConfig,
+                                   SearchDriver)
+    from repro.serve import SessionServer
+
+    n_var = int(os.environ.get("HELIX_BENCH_SWEEP_VARIANTS", "4"))
+    sweep_scale = float(os.environ.get("HELIX_BENCH_SWEEP_SCALE", "1"))
+    regs = [0.03, 0.3, 0.01, 1.0, 0.1, 3.0]
+    iters = max(30, int(300 * sweep_scale))
+    base = W.CensusKnobs(n_rows=max(2000, int(120_000 * sweep_scale)),
+                         train_iters=iters)
+    budget = max(2, n_var)
+    n_regs = min(len(regs), budget)
+    # reg varies fastest: FIFO's first `budget` arms are reg-diverse
+    # (each trains its own model); the grid's threshold axis is where
+    # the reuse frontier finds signature-adjacent siblings.
+    space = [{"reg": r, "eval_threshold": t}
+             for t in (0.5, 0.7) for r in regs[:n_regs]]
+
+    def factory(**params):
+        return W.build_census(dataclasses.replace(base, **params))
+
+    # 1a) fixed-batch FIFO baseline: the first `budget` arms in grid order
+    workdir = os.path.join(ROOT, "census_search_fixed")
+    shutil.rmtree(workdir, ignore_errors=True)
+    fixed_variants = [
+        SweepVariant(name=f"fix{i}", build=(lambda p=p: factory(**p)),
+                     knobs=p)
+        for i, p in enumerate(space[:budget])]
+    fixed = run_sweep(workdir, fixed_variants,
+                      engine=EngineConfig(schedule="fifo"),
+                      storage=None)
+    fixed.raise_errors()
+    fixed_nodes = sum(
+        r.report.execution.n_computed - len(r.report.execution.deduped)
+        for r in fixed.results)
+    fixed_sigs = len(fixed.fleet_computes())
+    fixed_models = len({v.knobs["reg"] for v in fixed_variants})
+
+    # 1b) the tuner: same budget, whole grid, marginal-cost frontier
+    workdir = os.path.join(ROOT, "census_search_tuner")
+    shutil.rmtree(workdir, ignore_errors=True)
+    server = SessionServer(workdir, registry={"census": factory},
+                           engine=EngineConfig(n_sessions=1),
+                           poll_interval=0.01)
+    try:
+        # max_inflight=2 over a 1-slot server: execution stays
+        # sequential, but the next pick is submitted while the current
+        # arm runs — its shared signatures enter the live multiplicity
+        # map, so the leader force-persists them (lease-following) even
+        # where cost economics alone would not materialize.
+        driver = SearchDriver(
+            server, "census", space=space,
+            config=SearchConfig(strategy="grid", max_arms=budget,
+                                frontier="reuse", max_inflight=2))
+        tuned = driver.run()
+    finally:
+        server.shutdown()
+    tuner_nodes = tuned.total_node_computes()
+    tuner_sigs = len(tuned.fleet_computes())
+    tuner_models = len({a.params["reg"] for a in tuned.arms
+                        if a.status != "skipped"})
+    print(f"census_search_reuse,"
+          f"{tuned.wall_seconds * 1e6 / budget:.0f},"
+          f"fixed_sigs={fixed_sigs};tuner_sigs={tuner_sigs};"
+          f"saved_sigs={fixed_sigs - tuner_sigs};"
+          f"fixed_models={fixed_models};tuner_models={tuner_models};"
+          f"fixed_nodes={fixed_nodes};tuner_nodes={tuner_nodes};"
+          f"fixed_s={fixed.wall_seconds:.2f};"
+          f"tuner_s={tuned.wall_seconds:.2f};"
+          f"arms={budget};grid={len(space)};"
+          f"wasted={tuned.wasted_recomputes()}", flush=True)
+
+    # 2) eager successive halving over train_iters
+    workdir = os.path.join(ROOT, "census_search_halving")
+    shutil.rmtree(workdir, ignore_errors=True)
+    server = SessionServer(workdir, registry={"census": factory},
+                           engine=EngineConfig(n_sessions=2),
+                           poll_interval=0.01)
+    try:
+        driver = SearchDriver(
+            server, "census",
+            space=[{"reg": r} for r in regs[:4]],
+            config=SearchConfig(
+                strategy="grid", metric="checkResults.value",
+                max_inflight=2,
+                halving=HalvingConfig(resource="train_iters",
+                                      levels=[max(10, iters // 5), iters],
+                                      eta=2.0, eager=True)))
+        halved = driver.run()
+        drift = (StorageLedger(server.store.ledger_path).used()
+                 - server.store.total_bytes())
+    finally:
+        server.shutdown()
+    best = halved.best()
+    print(f"census_search_halving,"
+          f"{halved.wall_seconds * 1e6 / max(len(halved.arms), 1):.0f},"
+          f"rungs={len(halved.rungs)};arms={len(halved.arms)};"
+          f"cancelled={halved.n_cancelled()};"
+          f"skipped={sum(1 for a in halved.arms if a.status == 'skipped')};"
+          f"best_reg={best.base_params['reg'] if best else 'na'};"
+          f"best_metric={best.metric if best else 'na'};"
+          f"ledger_drift_b={drift:.0f};"
+          f"wasted={halved.wasted_recomputes()}", flush=True)
+
+
 def bench_engine_overlap() -> None:
     """Scheduler-overlap ceiling: a wide diamond of GIL-releasing 150 ms
     wait stubs (no CPU contention). Near-width× speedup means the ready-set
@@ -590,6 +730,7 @@ def main() -> None:
     bench_server_reuse()
     bench_eviction()
     bench_remote_reuse()
+    bench_search_reuse()
     bench_engine_overlap()
 
 

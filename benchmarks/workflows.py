@@ -127,6 +127,7 @@ class CensusKnobs:
     use_interaction: bool = True
     use_hours: bool = True
     reg: float = 0.1
+    train_iters: int = 300        # halving resource (SGD steps)
     eval_threshold: float = 0.5   # PPR knob (report formatting)
     eval_metric: str = "accuracy"
 
@@ -192,8 +193,9 @@ def build_census(k: CensusKnobs) -> Workflow:
 
     model = wf.learner(
         "incPred", lambda ex: train_logreg(
-            ex["X"][:ex["n_train"]], ex["y"][:ex["n_train"]], k.reg),
-        [income], config=("LR", k.reg))
+            ex["X"][:ex["n_train"]], ex["y"][:ex["n_train"]], k.reg,
+            iters=k.train_iters),
+        [income], config=("LR", k.reg, k.train_iters))
 
     preds = wf.learner(
         "predictions", lambda ex, w: logreg_predict(w, ex["X"]),

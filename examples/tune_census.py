@@ -1,0 +1,119 @@
+"""Reuse-aware tuning: the census grid under an arm budget.
+
+Where ``sweep_census.py`` runs a *fixed* batch the user picked up front,
+this example hands the whole candidate grid to the
+:class:`~repro.core.search.SearchDriver` with a budget of half the arms
+and lets it choose. Before every submission the driver prices each
+remaining candidate with the server's ``estimate`` RPC — compiled DAG
+cost minus everything already materialized or in flight — and picks the
+cheapest *marginal* arm. The result: it spends the budget
+signature-adjacent (same ``reg``, different threshold), training half
+the models a grid-order batch of equal size would.
+
+Then a successive-halving run races four regularizations over a low
+``train_iters`` rung, promotes the best two to full training through
+the scheduler's rung priority, and early-stops the losers — whose
+pins and ledger reservations are released immediately (the example
+prints the ledger-vs-disk drift, which must be 0).
+
+    PYTHONPATH=src:benchmarks python examples/tune_census.py
+
+Env: HELIX_EXAMPLE_ROWS scales the dataset (default 30000; CI smoke
+uses 2000).
+"""
+import dataclasses
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks"))
+
+import workflows as W                                      # noqa: E402
+from repro.core import StorageLedger                       # noqa: E402
+from repro.core.config import EngineConfig                 # noqa: E402
+from repro.core.search import (HalvingConfig, SearchConfig,  # noqa: E402
+                               SearchDriver)
+from repro.serve import SessionServer                      # noqa: E402
+
+N_ROWS = int(os.environ.get("HELIX_EXAMPLE_ROWS", "30000"))
+
+
+def main():
+    base = W.CensusKnobs(n_rows=N_ROWS,
+                         train_iters=max(30, N_ROWS // 100))
+    registry = {"census": lambda **p:
+                W.build_census(dataclasses.replace(base, **p))}
+    space = [{"reg": r, "eval_threshold": t}
+             for t in (0.5, 0.7) for r in (0.01, 0.03, 0.1, 0.3)]
+    budget = len(space) // 2
+
+    # --- budgeted search: the driver picks WHICH arms run ----------------
+    with tempfile.TemporaryDirectory() as workdir:
+        server = SessionServer(workdir, registry=registry,
+                               engine=EngineConfig(n_sessions=1),
+                               poll_interval=0.01)
+        try:
+            driver = SearchDriver(
+                server, "census", space=space,
+                config=SearchConfig(strategy="grid", max_arms=budget,
+                                    frontier="reuse", max_inflight=2,
+                                    metric="checkResults.value"))
+            report = driver.run()
+        finally:
+            server.shutdown()
+
+    print(f"grid of {len(space)} candidates, budget of {budget} arms:")
+    for a in report.arms:
+        if a.status == "skipped":
+            continue
+        est = a.estimate or {}
+        print(f"  #{a.order} reg={a.params['reg']:<5} "
+              f"thr={a.params['eval_threshold']:<4} "
+              f"metric={a.metric if a.metric is not None else '-':<8} "
+              f"est_marginal={est.get('marginal_s', float('nan')):.2f} "
+              f"(hits={est.get('n_hit', 0)}, follow={est.get('n_follow', 0)})")
+    n_models = len({a.params['reg'] for a in report.arms
+                    if a.status != 'skipped'})
+    print(f"distinct signatures computed: {len(report.fleet_computes())}"
+          f"  models trained: {n_models} (grid order would train {budget})"
+          f"  wasted recomputes: {report.wasted_recomputes()}")
+    print(f"best: reg={report.best().params['reg']} "
+          f"metric={report.best().metric:.3f}\n")
+
+    # --- successive halving over train_iters ------------------------------
+    with tempfile.TemporaryDirectory() as workdir:
+        server = SessionServer(workdir, registry=registry,
+                               engine=EngineConfig(n_sessions=2),
+                               poll_interval=0.01)
+        try:
+            driver = SearchDriver(
+                server, "census",
+                space=[{"reg": r} for r in (0.01, 0.03, 0.1, 0.3)],
+                config=SearchConfig(
+                    strategy="grid", metric="checkResults.value",
+                    max_inflight=2,
+                    halving=HalvingConfig(
+                        resource="train_iters",
+                        levels=[max(10, base.train_iters // 5),
+                                base.train_iters],
+                        eta=2.0)))
+            report = driver.run()
+            drift = (StorageLedger(server.store.ledger_path).used()
+                     - server.store.total_bytes())
+        finally:
+            server.shutdown()
+
+    for rung in report.rungs:
+        print(f"rung {rung['rung']} (train_iters={rung['level']}): "
+              f"{rung['n_done']} ran, promoted {rung['promoted']}")
+    best = report.best()
+    print(f"halving best: reg={best.base_params['reg']} "
+          f"metric={best.metric:.3f} at rung {best.rung}")
+    print(f"ledger drift after early-stopped arms: {drift:.0f} B "
+          f"(must be 0); wasted recomputes: {report.wasted_recomputes()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,8 @@
 # as a composable library: Workflow DAG + change tracking (signatures) +
 # OPT-EXEC-PLAN (max-flow) + OPT-MAT-PLAN (streaming heuristic) + the
 # execution engine with a content-addressed, reshard-on-load store.
+from .config import (EngineConfig, ResilienceConfig, StoreConfig,
+                     reset_legacy_warnings)
 from .dag import DAG, Kind, Node, State, validate_states
 from .signature import compute_signatures, source_version
 from .oep import plan, plan_runtime, brute_force_plan
@@ -19,8 +21,12 @@ from .session import IterationReport, IterativeSession
 from .pruning import slice_from_outputs, zero_weight_extractors
 from .sweep import (SweepReport, SweepVariant, VariantResult, grid,
                     random_search, run_sweep)
+from .search import (ArmResult, HalvingConfig, SearchConfig, SearchDriver,
+                     SearchReport, tune)
 
 __all__ = [
+    "EngineConfig", "ResilienceConfig", "StoreConfig",
+    "reset_legacy_warnings",
     "DAG", "Kind", "Node", "State", "validate_states",
     "compute_signatures", "source_version",
     "plan", "plan_runtime", "brute_force_plan",
@@ -37,4 +43,6 @@ __all__ = [
     "IterationReport", "IterativeSession",
     "SweepReport", "SweepVariant", "VariantResult",
     "grid", "random_search", "run_sweep",
+    "ArmResult", "HalvingConfig", "SearchConfig", "SearchDriver",
+    "SearchReport", "tune",
 ]

@@ -19,6 +19,8 @@ import os
 import threading
 from typing import Any, Callable, Mapping
 
+from .config import (UNSET, EngineConfig, ResilienceConfig, StoreConfig,
+                     resolve)
 from .costs import CostModel
 from .dag import State
 from .eviction import Evictor
@@ -68,6 +70,18 @@ class IterationReport:
 
 class IterativeSession:
     """Drives iterations of one workflow.
+
+    Configuration comes in three layered frozen dataclasses (see
+    ``repro.core.config``): ``engine=`` (:class:`EngineConfig` — policy,
+    executor width, prefetch, async materialization, horizon, dedupe),
+    ``storage=`` (:class:`StoreConfig` — budget, eviction, remote tier,
+    ledger sharing, stale purging) and ``resilience=``
+    (:class:`ResilienceConfig` — dedupe lease waits, remote
+    retry/backoff, fault injection). The loose keyword arguments below
+    are the pre-config API; they still work, override the dataclasses,
+    and emit one :class:`DeprecationWarning` per kwarg name. The fully
+    resolved groups are exposed as ``self.engine_config`` /
+    ``self.store_config`` / ``self.resilience_config``.
 
     Execution-engine knobs (see ``executor.py`` for the scheduler model):
 
@@ -146,55 +160,93 @@ class IterativeSession:
     """
 
     def __init__(self, workdir: str,
-                 policy: Policy = Policy.OPT,
-                 storage_budget_bytes: float = float("inf"),
-                 async_materialization: bool = False,
-                 horizon: float = 1.0,
-                 max_workers: int = 1,
-                 prefetch_depth: int = 4,
-                 dedupe_inflight: bool = False,
-                 dedupe_wait_seconds: float = 600.0,
-                 shared_budget: bool = False,
-                 purge_stale: bool = True,
-                 nondet_reusable: bool = False,
-                 remote: RemoteStore | ObjectStore | str | None = None,
+                 policy: Policy = UNSET,
+                 storage_budget_bytes: float = UNSET,
+                 async_materialization: bool = UNSET,
+                 horizon: float = UNSET,
+                 max_workers: int = UNSET,
+                 prefetch_depth: int = UNSET,
+                 dedupe_inflight: bool = UNSET,
+                 dedupe_wait_seconds: float = UNSET,
+                 shared_budget: bool = UNSET,
+                 purge_stale: bool = UNSET,
+                 nondet_reusable: bool = UNSET,
+                 remote: RemoteStore | ObjectStore | str | None = UNSET,
                  store: Store | None = None,
                  cost_model: CostModel | None = None,
                  worker_pool=None,
                  multiplicity: Callable[[str], float] | None = None,
-                 evict_to_admit: bool = True,
+                 evict_to_admit: bool = UNSET,
                  evictor: Evictor | None = None,
-                 live_sigs: Callable[[str], bool] | None = None):
+                 live_sigs: Callable[[str], bool] | None = None,
+                 *,
+                 engine: EngineConfig | None = None,
+                 storage: StoreConfig | None = None,
+                 resilience: ResilienceConfig | None = None):
+        eng = resolve(
+            "IterativeSession", EngineConfig, engine,
+            site_defaults=dict(share_nondet=False, dedupe_inflight=False),
+            legacy=dict(
+                policy=("policy", policy),
+                async_materialization=("async_materialization",
+                                       async_materialization),
+                horizon=("horizon", horizon),
+                max_workers=("max_workers", max_workers),
+                prefetch_depth=("prefetch_depth", prefetch_depth),
+                dedupe_inflight=("dedupe_inflight", dedupe_inflight),
+                nondet_reusable=("share_nondet", nondet_reusable)))
+        sto = resolve(
+            "IterativeSession", StoreConfig, storage,
+            site_defaults=dict(shared_budget=False, purge_stale=True),
+            legacy=dict(
+                storage_budget_bytes=("budget_bytes", storage_budget_bytes),
+                shared_budget=("shared_budget", shared_budget),
+                purge_stale=("purge_stale", purge_stale),
+                evict_to_admit=("evict_to_admit", evict_to_admit),
+                remote=("remote", remote)))
+        res = resolve(
+            "IterativeSession", ResilienceConfig, resilience,
+            site_defaults=dict(dedupe_wait_seconds=600.0),
+            legacy=dict(
+                dedupe_wait_seconds=("dedupe_wait_seconds",
+                                     dedupe_wait_seconds)))
+        self.engine_config, self.store_config, self.resilience_config = \
+            eng, sto, res
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.store = store if store is not None \
             else Store(os.path.join(workdir, "store"),
-                       remote=as_remote_store(remote))
+                       remote=as_remote_store(
+                           sto.remote,
+                           max_retries=res.remote_max_retries,
+                           retry_backoff=res.remote_retry_backoff,
+                           faults=res.faults))
         self.cost_model = cost_model if cost_model is not None \
             else CostModel(os.path.join(workdir, "costs.json"))
         ledger = None
-        if shared_budget:
+        if sto.shared_budget:
             ledger = StorageLedger(self.store.ledger_path)
             ledger.ensure(float(self.store.total_bytes()))
         self.evictor = evictor
-        if (self.evictor is None and evict_to_admit
-                and storage_budget_bytes != float("inf")):
+        if (self.evictor is None and sto.evict_to_admit
+                and sto.budget_bytes != float("inf")):
             self.evictor = Evictor(self.store, cost_model=self.cost_model,
                                    live_multiplicity=live_sigs)
         self.materializer = Materializer(
-            policy=policy, storage_budget_bytes=storage_budget_bytes,
-            horizon=horizon, ledger=ledger,
-            nondet_reusable=nondet_reusable,
+            policy=eng.policy, storage_budget_bytes=sto.budget_bytes,
+            horizon=1.0 if eng.horizon is None else eng.horizon,
+            ledger=ledger,
+            nondet_reusable=eng.share_nondet,
             multiplicity=multiplicity,
             evictor=self.evictor)
         if ledger is None:
             self.materializer.used_bytes = float(self.store.total_bytes())
-        self.async_materialization = async_materialization
-        self.max_workers = max_workers
-        self.prefetch_depth = prefetch_depth
-        self.dedupe_inflight = dedupe_inflight
-        self.dedupe_wait_seconds = dedupe_wait_seconds
-        self.purge_stale = purge_stale
+        self.async_materialization = eng.async_materialization
+        self.max_workers = eng.max_workers
+        self.prefetch_depth = eng.prefetch_depth
+        self.dedupe_inflight = eng.dedupe_inflight
+        self.dedupe_wait_seconds = res.dedupe_wait_seconds
+        self.purge_stale = sto.purge_stale
         self.worker_pool = worker_pool
         self.iteration = 0
 

@@ -415,6 +415,16 @@ class Store:
         """Entry present in the local tier (one stat)."""
         return os.path.exists(os.path.join(self._dir(sig), "meta.json"))
 
+    def computing(self, sig: str) -> bool:
+        """Is an exclusive compute lease held on ``sig`` right now?
+
+        A non-blocking flock probe of the signature's lease file: True
+        means some session is mid-compute of this value. Advisory
+        observability (the server's marginal-cost estimate counts live
+        leaders with it) — never a synchronization primitive; the lease
+        can change hands the instant this returns."""
+        return FileLock(self._lease_path(sig)).probe() == "exclusive"
+
     def has(self, sig: str) -> bool:
         """Entry reachable: local, or committed in the remote tier (the
         planner's reuse test — a remote-only entry is loadable through

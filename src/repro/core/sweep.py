@@ -1,4 +1,4 @@
-"""Hyperparameter sweeps as session-server submissions.
+"""Fixed-batch hyperparameter sweeps as session-server submissions.
 
 Helix (the paper) optimizes *one* developer's iteration loop. This driver
 turns the same machinery into fleet-scale reuse, following "Exploiting
@@ -6,6 +6,16 @@ Reuse in Pipeline-Aware Hyperparameter Tuning" (Li et al., 2019) and
 "Accelerating Human-in-the-loop Machine Learning" (Xin et al., 2018): run
 K workflow *variants* (a knob grid or random search) concurrently against
 one shared materialization store.
+
+Since ISSUE 7 this module is the *thin, fixed-schedule baseline driver*:
+the user picks the K arms up front, they are submitted as one held batch,
+and every arm runs to completion. Its deliberately static shape is what
+makes it the reproducible baseline for multi-host and fifo-vs-prefix
+comparisons. The *adaptive* driver — dynamic arm choice under a budget,
+reuse-aware frontier ordering via the server's ``estimate`` RPC,
+successive-halving early stopping, mutation search — is
+:class:`repro.core.search.SearchDriver`, which talks to the same server
+through the client protocol instead of holding a batch.
 
 Since PR 3 a sweep is literally K submissions to an in-process
 :class:`~repro.serve.server.SessionServer` (submitted as one held batch so
@@ -58,7 +68,8 @@ import os
 import time
 from typing import Any, Callable, Mapping, Sequence
 
-from .omp import Policy
+from .config import (UNSET, EngineConfig, ResilienceConfig, StoreConfig,
+                     resolve)
 from .session import IterationReport
 from .workflow import Workflow
 
@@ -70,6 +81,7 @@ class SweepVariant:
     name: str
     build: Callable[[], Workflow]
     knobs: Any = None  # the knob value(s) this arm represents, for reports
+    seed: int | None = None  # the RNG seed that drew this arm, for replay
 
 
 def grid(base: Any, axes: Mapping[str, Sequence[Any]],
@@ -93,14 +105,29 @@ def grid(base: Any, axes: Mapping[str, Sequence[Any]],
 
 
 def random_search(base: Any, mutate: Callable[[Any, Any], Any], n: int,
-                  rng: Any, build: Callable[[Any], Workflow],
-                  name: str = "rand") -> list[SweepVariant]:
-    """N variants drawn by repeatedly applying ``mutate(knobs, rng)``."""
+                  rng: Any = None, build: Callable[[Any], Workflow] = None,
+                  name: str = "rand", *,
+                  seed: int | None = None) -> list[SweepVariant]:
+    """N variants drawn by repeatedly applying ``mutate(knobs, rng)``.
+
+    Prefer ``seed`` over passing a pre-built ``rng``: the draw sequence
+    is then a pure function of ``(base, mutate, n, seed)`` and the seed
+    is recorded on every variant (``SweepVariant.seed``, visible in
+    sweep reports via ``result.variant.seed``), so a tuning run can be
+    replayed bit-identically. An explicit ``rng`` still wins when given
+    (its state is the caller's business); ``seed`` is then recorded for
+    provenance only.
+    """
+    if build is None:
+        raise TypeError("random_search requires build=")
+    if rng is None:
+        import numpy as np
+        rng = np.random.default_rng(seed)
     out, cur = [], base
     for i in range(n):
         out.append(SweepVariant(name=f"{name}{i}",
                                 build=(lambda kn=cur: build(kn)),
-                                knobs=cur))
+                                knobs=cur, seed=seed))
         cur = mutate(cur, rng)
     return out
 
@@ -197,22 +224,33 @@ class SweepReport:
 def run_sweep(workdir: str,
               variants: Sequence[SweepVariant],
               *,
-              n_concurrent: int | None = None,
-              policy: Policy = Policy.OPT,
-              storage_budget_bytes: float = float("inf"),
-              max_workers: int = 1,
-              prefetch_depth: int = 4,
-              async_materialization: bool = False,
-              share_nondet: bool = True,
-              dedupe_inflight: bool = True,
-              dedupe_wait_seconds: float = 3600.0,
-              horizon: float | None = None,
-              schedule: str = "prefix",
-              pool_workers: int | None = None,
-              evict_to_admit: bool = True,
+              n_concurrent: Any = UNSET,
+              policy: Any = UNSET,
+              storage_budget_bytes: Any = UNSET,
+              max_workers: Any = UNSET,
+              prefetch_depth: Any = UNSET,
+              async_materialization: Any = UNSET,
+              share_nondet: Any = UNSET,
+              dedupe_inflight: Any = UNSET,
+              dedupe_wait_seconds: Any = UNSET,
+              horizon: Any = UNSET,
+              schedule: Any = UNSET,
+              pool_workers: Any = UNSET,
+              evict_to_admit: Any = UNSET,
               n_hosts: int = 1,
-              remote: Any = None) -> SweepReport:
+              remote: Any = UNSET,
+              engine: EngineConfig | None = None,
+              storage: StoreConfig | None = None,
+              resilience: ResilienceConfig | None = None) -> SweepReport:
     """Run every variant against one shared store in ``workdir``.
+
+    Configuration comes as the layered dataclasses ``engine=`` /
+    ``storage=`` / ``resilience=`` (see :mod:`repro.core.config`);
+    ``n_concurrent`` maps to ``EngineConfig.n_sessions`` (default: all
+    variants at once). The loose keyword arguments are a deprecated
+    shim kept for existing call sites — each warns once per process and
+    overrides the corresponding config field. ``n_hosts`` stays a real
+    parameter: it is sweep *topology*, not engine configuration.
 
     Spins up an in-process :class:`~repro.serve.server.SessionServer`
     over ``workdir``, submits the K variants as one held batch (so the
@@ -263,18 +301,46 @@ def run_sweep(workdir: str,
     variants = list(variants)
     if not variants:
         return SweepReport(results=[], wall_seconds=0.0, store_bytes=0)
-    n_concurrent = len(variants) if n_concurrent is None \
-        else max(1, int(n_concurrent))
-    if schedule == "fifo" and horizon is None:
+    eng = resolve(
+        "run_sweep", EngineConfig, engine,
+        site_defaults=dict(share_nondet=True, dedupe_inflight=True),
+        legacy=dict(
+            n_concurrent=("n_sessions", n_concurrent),
+            policy=("policy", policy),
+            max_workers=("max_workers", max_workers),
+            prefetch_depth=("prefetch_depth", prefetch_depth),
+            async_materialization=("async_materialization",
+                                   async_materialization),
+            share_nondet=("share_nondet", share_nondet),
+            dedupe_inflight=("dedupe_inflight", dedupe_inflight),
+            horizon=("horizon", horizon),
+            schedule=("schedule", schedule),
+            pool_workers=("pool_workers", pool_workers)))
+    sto = resolve(
+        "run_sweep", StoreConfig, storage,
+        site_defaults=dict(shared_budget=True, purge_stale=False),
+        legacy=dict(
+            storage_budget_bytes=("budget_bytes", storage_budget_bytes),
+            evict_to_admit=("evict_to_admit", evict_to_admit),
+            remote=("remote", remote)))
+    res = resolve(
+        "run_sweep", ResilienceConfig, resilience,
+        site_defaults=dict(dedupe_wait_seconds=3600.0),
+        legacy=dict(
+            dedupe_wait_seconds=("dedupe_wait_seconds",
+                                 dedupe_wait_seconds)))
+    n_concurrent = len(variants) if eng.n_sessions is None \
+        else max(1, int(eng.n_sessions))
+    if eng.schedule == "fifo" and eng.horizon is None:
         # The fifo baseline must be PR 2 end-to-end: no observed
         # multiplicity (the server already withholds it in fifo mode),
         # and PR 2's static horizon≈K amortization default.
-        horizon = float(len(variants))
+        eng = dataclasses.replace(eng, horizon=float(len(variants)))
     n_hosts = max(1, min(int(n_hosts), len(variants)))
     slots_per_host = max(1, math.ceil(n_concurrent / n_hosts))
     # One nonce map for the whole fleet: nondeterministic operators stay
     # sweep-equivalent across hosts, exactly as within one server.
-    fleet_nonces = SharedNonces() if share_nondet and n_hosts > 1 \
+    fleet_nonces = SharedNonces() if eng.share_nondet and n_hosts > 1 \
         else None
 
     servers = [
@@ -283,16 +349,10 @@ def run_sweep(workdir: str,
             # without one, "hosts" share the workdir itself (the PR 2
             # N-process path) — private workdirs with no tier would
             # silently lose all cross-host reuse.
-            workdir if n_hosts == 1 or remote is None
+            workdir if n_hosts == 1 or sto.remote is None
             else os.path.join(workdir, f"host{h}"),
-            n_sessions=slots_per_host, pool_workers=pool_workers,
-            schedule=schedule, policy=policy,
-            storage_budget_bytes=storage_budget_bytes,
-            max_workers=max_workers, prefetch_depth=prefetch_depth,
-            async_materialization=async_materialization,
-            share_nondet=share_nondet, dedupe_inflight=dedupe_inflight,
-            dedupe_wait_seconds=dedupe_wait_seconds, horizon=horizon,
-            evict_to_admit=evict_to_admit, remote=remote,
+            engine=dataclasses.replace(eng, n_sessions=slots_per_host),
+            storage=sto, resilience=res,
             nonces=fleet_nonces)
         for h in range(n_hosts)]
     t_start = time.perf_counter()

@@ -3,8 +3,8 @@ many clients' workflow submissions onto one shared store, schedules them
 with global knowledge (shared-prefix-first, live signature multiplicity
 feeding OMP's amortization), and shares one elastic executor worker pool
 across all hosted sessions. See docs/architecture.md for the layer map."""
-from .client import (InProcessClient, ServerClient, ServerError,
-                     connect_tcp, connect_unix)
+from .client import (Client, InProcessClient, ServerClient, ServerError,
+                     connect, connect_tcp, connect_unix)
 from .pool import SharedWorkerPool
 from .protocol import (ProtocolError, ServerBusy, jsonable, recv_msg,
                        send_msg)
@@ -12,8 +12,8 @@ from .scheduler import PrefixScheduler
 from .server import Job, SessionServer, SharedNonces
 
 __all__ = [
-    "InProcessClient", "ServerClient", "ServerError",
-    "connect_tcp", "connect_unix",
+    "Client", "InProcessClient", "ServerClient", "ServerError",
+    "connect", "connect_tcp", "connect_unix",
     "SharedWorkerPool",
     "ProtocolError", "ServerBusy", "jsonable", "recv_msg", "send_msg",
     "PrefixScheduler",

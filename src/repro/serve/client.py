@@ -24,26 +24,63 @@ Hardening (both clients):
   A ``submit`` that may have been received is never resent (no double
   submissions); the error propagates instead.
 
-Quickstart::
+Quickstart (the one entry point — :func:`connect` — picks the transport
+from what you hand it)::
 
-    from repro.serve import SessionServer, connect_unix
+    from repro.serve import SessionServer, connect
 
     server = SessionServer("/data/helix", registry={"census": build})
     path = server.serve_unix("/tmp/helix.sock")
 
-    client = connect_unix(path, timeout=30.0)
-    job = client.submit("census", {"reg": 0.3})
+    client = connect(path, timeout=30.0)   # or connect(server),
+    job = client.submit("census", {"reg": 0.3})  # or connect((host, port))
     print(client.wait(job)["outputs"])
     client.close()
+
+Direct construction of :class:`ServerClient` / :class:`InProcessClient`
+(and the transport-specific ``connect_unix`` / ``connect_tcp`` helpers)
+still works but is discouraged in new code: everything that consumes a
+client — the search driver above all — is written against the
+:class:`Client` protocol and should receive whatever :func:`connect`
+returns.
 """
 from __future__ import annotations
 
 import socket
 import time
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Mapping, Protocol, runtime_checkable
 
 from .protocol import ServerBusy, recv_msg, send_msg
 from .server import SessionServer
+
+
+@runtime_checkable
+class Client(Protocol):
+    """What every session-server client speaks, transport aside.
+
+    The structural type returned by :func:`connect` and consumed by the
+    search driver and examples: JSON-shaped dicts in and out, identical
+    over a unix socket, TCP, or an in-process server. See
+    :class:`_ClientBase` for the shared method semantics.
+    """
+
+    def hello(self) -> dict: ...            # noqa: D102 — protocol stubs;
+    def submit(self, workflow: str,         # noqa: D102 — semantics live
+               params: Mapping[str, Any] | None = None,     # on _ClientBase
+               name: str | None = None, timeout: float | None = None,
+               priority: int = 0) -> str: ...
+    def estimate(self, workflow: str,  # noqa: D102
+                 params: Mapping[str, Any] | None = None) -> dict: ...
+    def wait(self, job: str, timeout: float | None = None,  # noqa: D102
+             detail: bool = False) -> dict: ...
+    def job(self, job: str, detail: bool = False) -> dict: ...  # noqa: D102
+    def cancel(self, job: str) -> bool: ...                 # noqa: D102
+    def forget(self, job: str) -> bool: ...                 # noqa: D102
+    def status(self) -> dict: ...                           # noqa: D102
+    def multiplicity(self, sig: str) -> int: ...            # noqa: D102
+    def drain(self, timeout: float | None = None) -> bool: ...  # noqa: D102
+    def shutdown(self) -> dict: ...                         # noqa: D102
+    def close(self) -> None: ...                            # noqa: D102
 
 
 class ServerError(RuntimeError):
@@ -77,12 +114,14 @@ class _ClientBase:
 
     def submit(self, workflow: str, params: Mapping[str, Any]
                | None = None, name: str | None = None,
-               timeout: float | None = None) -> str:
+               timeout: float | None = None,
+               priority: int = 0) -> str:
         """Submit a registered workflow by name; returns the job id.
 
         ``timeout`` bounds the job's server-side *running* time (expiry
-        cancels it — status ``cancelled``). A ``busy`` response (bounded
-        admission queue full) is retried after the server's
+        cancels it — status ``cancelled``); ``priority`` sets the
+        dispatch class (higher dispatches first). A ``busy`` response
+        (bounded admission queue full) is retried after the server's
         ``retry_after`` hint, ``busy_retries`` times, then raises
         :class:`~repro.serve.protocol.ServerBusy`."""
         attempts = 0
@@ -90,7 +129,7 @@ class _ClientBase:
             try:
                 resp = self._rpc(op="submit", workflow=workflow,
                                  params=dict(params or {}), name=name,
-                                 timeout=timeout)
+                                 timeout=timeout, priority=priority)
                 return resp["job"]
             except ServerBusy as e:
                 attempts += 1
@@ -98,13 +137,30 @@ class _ClientBase:
                     raise
                 time.sleep(e.retry_after)
 
-    def wait(self, job: str, timeout: float | None = None) -> dict:
-        """Block until ``job`` finishes; returns its summary dict."""
-        return self._rpc(op="wait", job=job, timeout=timeout)
+    def estimate(self, workflow: str, params: Mapping[str, Any]
+                 | None = None) -> dict:
+        """Marginal-compute estimate for a candidate submission.
 
-    def job(self, job: str) -> dict:
-        """Non-blocking job summary."""
-        return self._rpc(op="job", job=job)
+        Never enqueues anything: the server compiles the candidate under
+        its shared nonce map and prices its unique signatures against
+        the store, live leaders, and queued siblings — see
+        ``SessionServer.estimate_marginal_cost`` for the returned
+        fields (``marginal_s``, ``hit_s``, ``follow_s``, ...)."""
+        return self._rpc(op="estimate", workflow=workflow,
+                         params=dict(params or {}))
+
+    def wait(self, job: str, timeout: float | None = None,
+             detail: bool = False) -> dict:
+        """Block until ``job`` finishes; returns its summary dict.
+
+        ``detail=True`` adds the computed-signature lists (see
+        ``SessionServer.job_summary``)."""
+        return self._rpc(op="wait", job=job, timeout=timeout,
+                         detail=detail)
+
+    def job(self, job: str, detail: bool = False) -> dict:
+        """Non-blocking job summary (``detail`` as in :meth:`wait`)."""
+        return self._rpc(op="job", job=job, detail=detail)
 
     def cancel(self, job: str) -> bool:
         """Stop a queued or running job (cooperative: the executor
@@ -151,10 +207,11 @@ class ServerClient(_ClientBase):
 
     # Ops safe to resend after a connection died mid-RPC: each is a pure
     # query or naturally idempotent (cancel/forget/drain re-apply to the
-    # same state; "wait" just re-waits). "submit" is deliberately absent.
+    # same state; "wait" just re-waits; "estimate" never mutates).
+    # "submit" is deliberately absent.
     _IDEMPOTENT = frozenset({"hello", "status", "job", "wait", "forget",
                              "multiplicity", "drain", "cancel",
-                             "shutdown"})
+                             "shutdown", "estimate"})
 
     def __init__(self, sock: socket.socket, *,
                  timeout: float | None = None,
@@ -200,7 +257,8 @@ class ServerClient(_ClientBase):
             send_msg(self._sock, msg)
             return recv_msg(self._sock)
 
-    def wait(self, job: str, timeout: float | None = None) -> dict:
+    def wait(self, job: str, timeout: float | None = None,
+             detail: bool = False) -> dict:
         """Block until ``job`` finishes; returns its summary dict.
 
         With a socket timeout configured, the wait is chunked into RPCs
@@ -210,7 +268,7 @@ class ServerClient(_ClientBase):
         ``timeout`` (None = forever) still raises
         :class:`TimeoutError` exactly like the unchunked call."""
         if self.timeout is None:
-            return super().wait(job, timeout)
+            return super().wait(job, timeout, detail)
         chunk = max(0.05, self.timeout * 0.5)
         deadline = None if timeout is None \
             else time.monotonic() + timeout
@@ -219,7 +277,8 @@ class ServerClient(_ClientBase):
                 else max(0.0, deadline - time.monotonic())
             step = chunk if left is None else min(chunk, left)
             try:
-                return self._rpc(op="wait", job=job, timeout=step)
+                return self._rpc(op="wait", job=job, timeout=step,
+                                 detail=detail)
             except ServerError as e:
                 if not str(e).startswith("TimeoutError"):
                     raise
@@ -301,3 +360,37 @@ def connect_tcp(host: str, port: int, *, timeout: float | None = None
         return sock
 
     return ServerClient(dial(), timeout=timeout, reconnect=dial)
+
+
+def connect(target: "SessionServer | Client | str | tuple[str, int]", *,
+            timeout: float | None = None) -> Client:
+    """One entry point for every transport; returns a :class:`Client`.
+
+    Dispatch on ``target``:
+
+    * a live :class:`~repro.serve.server.SessionServer` → in-process
+      client (the protocol handler is exercised, no socket);
+    * ``(host, port)`` tuple → TCP;
+    * ``"host:port"`` string → TCP;
+    * any other string → unix-domain socket path;
+    * an existing client → returned unchanged (lets APIs accept "server,
+      address, or client" uniformly — the search driver does).
+
+    ``timeout`` is forwarded to the socket transports (per-RPC bound +
+    reconnect-on-error, see :func:`connect_unix`); it is meaningless —
+    and ignored — for the in-process transport.
+    """
+    if isinstance(target, SessionServer):
+        return InProcessClient(target)
+    if isinstance(target, _ClientBase):
+        return target
+    if isinstance(target, tuple) and len(target) == 2:
+        return connect_tcp(str(target[0]), int(target[1]), timeout=timeout)
+    if isinstance(target, str):
+        host, sep, port = target.rpartition(":")
+        if sep and port.isdigit() and host and "/" not in host:
+            return connect_tcp(host, int(port), timeout=timeout)
+        return connect_unix(target, timeout=timeout)
+    raise TypeError(
+        f"connect() expects a SessionServer, client, address string, or "
+        f"(host, port) tuple; got {type(target).__name__}")

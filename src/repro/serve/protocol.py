@@ -11,9 +11,13 @@ Request messages (``op`` selects the operation)::
 
     {"op": "hello"}
     {"op": "submit", "workflow": <registry name>, "params": {...},
-     "name": <optional job label>, "timeout": <optional s>}
-    {"op": "job",    "job": <job id>}                  # non-blocking status
-    {"op": "wait",   "job": <job id>, "timeout": <s>}  # blocks until done
+     "name": <optional job label>, "timeout": <optional s>,
+     "priority": <optional int, default 0; higher dispatches first>}
+    {"op": "estimate", "workflow": <registry name>, "params": {...}}
+    {"op": "job",    "job": <job id>,                  # non-blocking status
+     "detail": <optional bool>}
+    {"op": "wait",   "job": <job id>, "timeout": <s>,  # blocks until done
+     "detail": <optional bool>}
     {"op": "cancel", "job": <job id>}                  # stop queued/running
     {"op": "forget", "job": <job id>}                  # drop a finished job
     {"op": "status"}
@@ -24,9 +28,18 @@ Request messages (``op`` selects the operation)::
 Responses always carry ``ok`` (bool); failures carry ``error`` (str).
 ``submit`` responds ``{"ok": true, "job": id}``; ``wait``/``job`` respond
 with a job summary (status, timings, execution counts, JSON-coerced
-outputs — see :func:`jsonable`). A ``wait`` that times out responds
-``ok: false`` with a ``TimeoutError:`` message. The server retains the
-last ``max_finished_jobs`` summaries; ``forget`` releases one eagerly.
+outputs — see :func:`jsonable`); with ``detail: true`` the summary's
+``execution`` block also lists ``computed_sigs`` /
+``blind_computed_sigs`` for fleet duplicate-compute accounting. A
+``wait`` that times out responds ``ok: false`` with a ``TimeoutError:``
+message. The server retains the last ``max_finished_jobs`` summaries;
+``forget`` releases one eagerly.
+
+``estimate`` prices a *candidate* submission without enqueueing it:
+the response carries ``total_s`` / ``marginal_s`` / ``hit_s`` /
+``follow_s`` / ``queued_shared_s`` plus node counts (see
+``SessionServer.estimate_marginal_cost``). The search driver orders its
+frontier with this op.
 
 Backpressure: when the server's admission queue is full (``max_queue``),
 ``submit`` responds ``{"ok": false, "busy": true, "retry_after": <s>,

@@ -44,6 +44,7 @@ class _SchedJob(Protocol):
 
     seq: int                    # arrival order (FIFO tiebreak)
     sigs: frozenset             # the submission's full signature set
+    priority: int               # dispatch class (higher first; default 0)
 
 
 class PrefixScheduler:
@@ -137,16 +138,22 @@ class PrefixScheduler:
         """Choose the next submission to dispatch (None iff queue empty).
 
         ``queued`` is the live queue in arrival order; ``inflight`` is the
-        union of running submissions' signatures. Unblocked submissions
-        are ranked by shared weight (descending) then arrival; blocked
-        ones (they would lease-wait on a running sibling) are considered
-        only when no unblocked submission exists — a lease-following
-        sibling still beats an idle slot.
+        union of running submissions' signatures. Within a priority class
+        (``priority`` descending — the search driver marks promoted rungs
+        so survivors outrank fresh exploratory arms), unblocked
+        submissions are ranked by shared weight (descending) then
+        arrival; blocked ones (they would lease-wait on a running
+        sibling) are considered only when no unblocked submission exists
+        — a lease-following sibling still beats an idle slot.
         """
         if not queued:
             return None
         if self.mode == "fifo":
-            return queued[0]
+            # Priority classes apply in fifo mode too (arrival order
+            # within a class); all-default-priority queues reduce to
+            # queued[0], so the PR 2 baseline is byte-identical.
+            return min(queued,
+                       key=lambda j: (-getattr(j, "priority", 0), j.seq))
         inflight = set(inflight)
         # One store stat per signature per decision: queued siblings
         # largely share signatures, and this may run under the server
@@ -163,7 +170,7 @@ class PrefixScheduler:
         best_key: tuple | None = None
         for job in queued:
             is_blocked = self.blocked(job, inflight, has)
-            key = (is_blocked,
+            key = (is_blocked, -getattr(job, "priority", 0),
                    self.overlap_weight(job, inflight, has)
                    if is_blocked else 0.0,
                    -self.shared_weight(job, has), job.seq)

@@ -43,11 +43,15 @@ import uuid
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Mapping
 
+from ..core.config import (UNSET, EngineConfig, ResilienceConfig,
+                           StoreConfig, resolve)
 from ..core.costs import CostModel
+from ..core.dag import State
 from ..core.eviction import Evictor
 from ..core.executor import JobCancelled
 from ..core.locking import StorageLedger
 from ..core.omp import Policy
+from ..core.pruning import slice_from_outputs
 from ..core.remote import ObjectStore, RemoteStore, as_remote_store
 from ..core.session import IterationReport, IterativeSession
 from ..core.signature import compute_signatures
@@ -129,6 +133,10 @@ class Job:
     # shutdown.
     cancel_event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
+    # Dispatch class: higher dispatches first within the scheduler's
+    # blocked/unblocked tiers. The search driver marks promoted rungs so
+    # survivors outrank fresh exploratory arms.
+    priority: int = 0
 
     @property
     def queued_seconds(self) -> float:
@@ -141,8 +149,15 @@ class Job:
 class SessionServer:
     """Multiplex many workflow submissions onto one shared store.
 
-    Parameters mirror :class:`~repro.core.session.IterativeSession` where
-    they are forwarded to the per-submission sessions; server-level knobs:
+    Configuration comes as the three layered dataclasses of
+    ``repro.core.config`` — ``engine=`` (:class:`EngineConfig`),
+    ``storage=`` (:class:`StoreConfig`), ``resilience=``
+    (:class:`ResilienceConfig`) — forwarded to each per-submission
+    session. The loose keyword arguments below are the pre-config API:
+    they still work, override the dataclasses, and warn once per kwarg
+    name (DeprecationWarning). Resolved groups are exposed as
+    ``self.engine_config`` / ``self.store_config`` /
+    ``self.resilience_config``. Server-level knobs:
 
     ``registry``
         ``{name: factory}`` of workflows remote clients may submit;
@@ -220,67 +235,112 @@ class SessionServer:
     def __init__(self, workdir: str, *,
                  registry: Mapping[str, Callable[..., Workflow]]
                  | None = None,
-                 n_sessions: int = 4,
-                 pool_workers: int | None = None,
-                 schedule: str = "prefix",
-                 policy: Policy = Policy.OPT,
-                 storage_budget_bytes: float = float("inf"),
-                 max_workers: int = 1,
-                 prefetch_depth: int = 4,
-                 async_materialization: bool = False,
-                 share_nondet: bool = True,
-                 dedupe_inflight: bool = True,
-                 dedupe_wait_seconds: float = 3600.0,
-                 purge_stale: bool = False,
-                 horizon: float | None = None,
+                 n_sessions: int = UNSET,
+                 pool_workers: int | None = UNSET,
+                 schedule: str = UNSET,
+                 policy: Policy = UNSET,
+                 storage_budget_bytes: float = UNSET,
+                 max_workers: int = UNSET,
+                 prefetch_depth: int = UNSET,
+                 async_materialization: bool = UNSET,
+                 share_nondet: bool = UNSET,
+                 dedupe_inflight: bool = UNSET,
+                 dedupe_wait_seconds: float = UNSET,
+                 purge_stale: bool = UNSET,
+                 horizon: float | None = UNSET,
                  poll_interval: float = 0.05,
                  max_finished_jobs: int = 1024,
-                 evict_to_admit: bool = True,
-                 remote: RemoteStore | ObjectStore | str | None = None,
+                 evict_to_admit: bool = UNSET,
+                 remote: RemoteStore | ObjectStore | str | None = UNSET,
                  nonces: SharedNonces | None = None,
-                 max_queue: int | None = None,
-                 busy_retry_after: float = 0.5,
-                 job_timeout: float | None = None,
-                 gc_interval: float | None = None,
-                 gc_min_age: float = 3600.0):
+                 max_queue: int | None = UNSET,
+                 busy_retry_after: float = UNSET,
+                 job_timeout: float | None = UNSET,
+                 gc_interval: float | None = UNSET,
+                 gc_min_age: float = UNSET,
+                 engine: EngineConfig | None = None,
+                 storage: StoreConfig | None = None,
+                 resilience: ResilienceConfig | None = None):
+        eng = resolve(
+            "SessionServer", EngineConfig, engine,
+            site_defaults=dict(share_nondet=True, dedupe_inflight=True,
+                               n_sessions=4),
+            legacy=dict(
+                n_sessions=("n_sessions", n_sessions),
+                pool_workers=("pool_workers", pool_workers),
+                schedule=("schedule", schedule),
+                policy=("policy", policy),
+                max_workers=("max_workers", max_workers),
+                prefetch_depth=("prefetch_depth", prefetch_depth),
+                async_materialization=("async_materialization",
+                                       async_materialization),
+                share_nondet=("share_nondet", share_nondet),
+                dedupe_inflight=("dedupe_inflight", dedupe_inflight),
+                horizon=("horizon", horizon)))
+        sto = resolve(
+            "SessionServer", StoreConfig, storage,
+            site_defaults=dict(shared_budget=True, purge_stale=False),
+            legacy=dict(
+                storage_budget_bytes=("budget_bytes", storage_budget_bytes),
+                purge_stale=("purge_stale", purge_stale),
+                evict_to_admit=("evict_to_admit", evict_to_admit),
+                remote=("remote", remote),
+                gc_interval=("gc_interval", gc_interval),
+                gc_min_age=("gc_min_age", gc_min_age)))
+        res = resolve(
+            "SessionServer", ResilienceConfig, resilience,
+            site_defaults=dict(dedupe_wait_seconds=3600.0),
+            legacy=dict(
+                dedupe_wait_seconds=("dedupe_wait_seconds",
+                                     dedupe_wait_seconds),
+                max_queue=("max_queue", max_queue),
+                busy_retry_after=("busy_retry_after", busy_retry_after),
+                job_timeout=("job_timeout", job_timeout)))
+        self.engine_config, self.store_config, self.resilience_config = \
+            eng, sto, res
         os.makedirs(workdir, exist_ok=True)
         self.workdir = workdir
         self.registry = dict(registry or {})
-        self.n_sessions = max(1, int(n_sessions))
-        self.policy = policy
-        self.storage_budget_bytes = storage_budget_bytes
-        self.max_workers = max(1, int(max_workers))
-        self.prefetch_depth = prefetch_depth
-        self.async_materialization = async_materialization
-        self.share_nondet = share_nondet
-        self.dedupe_inflight = dedupe_inflight
-        self.dedupe_wait_seconds = dedupe_wait_seconds
-        self.purge_stale = purge_stale
-        self.horizon = 1.0 if horizon is None else float(horizon)
+        self.n_sessions = max(1, int(eng.n_sessions))
+        self.policy = eng.policy
+        self.storage_budget_bytes = sto.budget_bytes
+        self.max_workers = max(1, int(eng.max_workers))
+        self.prefetch_depth = eng.prefetch_depth
+        self.async_materialization = eng.async_materialization
+        self.share_nondet = eng.share_nondet
+        self.dedupe_inflight = eng.dedupe_inflight
+        self.dedupe_wait_seconds = res.dedupe_wait_seconds
+        self.purge_stale = sto.purge_stale
+        self.horizon = 1.0 if eng.horizon is None else float(eng.horizon)
         self.poll_interval = poll_interval
-        self.max_queue = None if max_queue is None else max(1, int(max_queue))
-        self.busy_retry_after = float(busy_retry_after)
-        self.job_timeout = job_timeout
+        self.max_queue = None if res.max_queue is None \
+            else max(1, int(res.max_queue))
+        self.busy_retry_after = float(res.busy_retry_after)
+        self.job_timeout = res.job_timeout
 
         # One store / cost model / ledger / worker pool for every session
         # this server hosts. Reconcile the shared budget ledger with disk
         # unless another process's fleet is mid-run on this workdir (its
         # live reservations must not be erased).
-        self._owns_remote = not isinstance(remote, RemoteStore)
+        self._owns_remote = not isinstance(sto.remote, RemoteStore)
         self.store = Store(os.path.join(workdir, "store"),
-                           remote=as_remote_store(remote))
+                           remote=as_remote_store(
+                               sto.remote,
+                               max_retries=res.remote_max_retries,
+                               retry_backoff=res.remote_retry_backoff,
+                               faults=res.faults))
         self.cost_model = CostModel(os.path.join(workdir, "costs.json"))
         if not self.store.any_live_lease():
             StorageLedger(self.store.ledger_path).reset(
                 float(self.store.total_bytes()))
         self.pool = SharedWorkerPool(
-            pool_workers if pool_workers is not None
+            eng.pool_workers if eng.pool_workers is not None
             else max(self.n_sessions, self.max_workers))
         self.nonces: SharedNonces | None = \
             nonces if nonces is not None \
-            else (SharedNonces() if share_nondet else None)
+            else (SharedNonces() if eng.share_nondet else None)
         self.scheduler = PrefixScheduler(self.store, self.cost_model,
-                                         mode=schedule)
+                                         mode=eng.schedule)
         # Signatures sibling *hosts* also want (multi-host drivers feed
         # this via share_across; the live multiplicity map below only
         # covers this host's own submissions).
@@ -291,9 +351,9 @@ class SessionServer:
         # aggregate server-wide). The scheduler's live multiplicity map
         # is the veto: entries queued/running clients still want are
         # never eviction candidates.
-        self.evict_to_admit = bool(evict_to_admit)
+        self.evict_to_admit = bool(sto.evict_to_admit)
         self.evictor: Evictor | None = None
-        if self.evict_to_admit and storage_budget_bytes != float("inf"):
+        if self.evict_to_admit and sto.budget_bytes != float("inf"):
             # Same gate as IterativeSession: an unbounded budget can
             # never trigger eviction, and reports should carry the
             # documented "empty when eviction off" shape.
@@ -328,8 +388,8 @@ class SessionServer:
         # publisher died before the commit marker) — clients come and
         # go, the server persists. Age-gated (gc_min_age) so an
         # in-flight slow upload is never mistaken for a crash.
-        self.gc_min_age = float(gc_min_age)
-        self.gc_interval = (gc_interval if gc_interval is not None
+        self.gc_min_age = float(sto.gc_min_age)
+        self.gc_interval = (sto.gc_interval if sto.gc_interval is not None
                             else (900.0 if self.store.remote is not None
                                   else 0.0))
         self.gc_stats = {"runs": 0, "reclaimed": 0}
@@ -356,7 +416,8 @@ class SessionServer:
     # -- submission --------------------------------------------------------
     def submit(self, workflow: Workflow | Callable[[], Workflow], *,
                name: str | None = None,
-               timeout: float | None = None) -> Job:
+               timeout: float | None = None,
+               priority: int = 0) -> Job:
         """Submit a workflow (or a zero-arg factory) for execution.
 
         Compiles it immediately — under the server's shared nonce map —
@@ -364,7 +425,10 @@ class SessionServer:
         cross-client multiplicity map, and enqueues the job for the
         global scheduler. Returns the :class:`Job` handle; use
         :meth:`wait` for the result. ``timeout`` bounds the job's
-        *running* time (default: the server's ``job_timeout``); raises
+        *running* time (default: the server's ``job_timeout``);
+        ``priority`` sets the dispatch class (higher dispatches first —
+        the search driver marks promoted rungs so survivors outrank
+        fresh exploratory arms). Raises
         :class:`~repro.serve.protocol.ServerBusy` when the bounded
         admission queue (``max_queue``) is full — the submission had no
         effect and is safe to retry.
@@ -385,7 +449,8 @@ class SessionServer:
                       workflow=wf, sigs=sigs, seq=self._seq,
                       submitted_at=time.perf_counter(),
                       timeout=timeout if timeout is not None
-                      else self.job_timeout)
+                      else self.job_timeout,
+                      priority=int(priority))
             self._jobs[job.id] = job
             self._queue.append(job)
             self.scheduler.add(job)
@@ -394,7 +459,8 @@ class SessionServer:
 
     def submit_named(self, workflow: str, params: Mapping[str, Any]
                      | None = None, *, name: str | None = None,
-                     timeout: float | None = None) -> Job:
+                     timeout: float | None = None,
+                     priority: int = 0) -> Job:
         """Submit a registered workflow by name (the RPC path)."""
         if workflow not in self.registry:
             known = ", ".join(sorted(self.registry)) or "none"
@@ -402,7 +468,87 @@ class SessionServer:
                 f"unknown workflow {workflow!r}; registered: {known}")
         factory = self.registry[workflow]
         wf = factory(**dict(params or {}))
-        return self.submit(wf, name=name or workflow, timeout=timeout)
+        return self.submit(wf, name=name or workflow, timeout=timeout,
+                           priority=priority)
+
+    def _materialize_workflow(self, workflow: str | Workflow
+                              | Callable[[], Workflow],
+                              params: Mapping[str, Any] | None) -> Workflow:
+        """Resolve a registry name / instance / factory to a Workflow."""
+        if isinstance(workflow, str):
+            if workflow not in self.registry:
+                known = ", ".join(sorted(self.registry)) or "none"
+                raise KeyError(
+                    f"unknown workflow {workflow!r}; registered: {known}")
+            return self.registry[workflow](**dict(params or {}))
+        return workflow if isinstance(workflow, Workflow) else workflow()
+
+    def estimate_marginal_cost(self, workflow: str | Workflow
+                               | Callable[[], Workflow],
+                               params: Mapping[str, Any] | None = None
+                               ) -> dict:
+        """Estimate the *marginal* compute a submission would add now.
+
+        Compiles the candidate under the server's shared nonce map,
+        slices it to its outputs, and walks the unique signatures of the
+        sliced DAG, pricing each with the shared cost model (unseen
+        signatures get the 1.0 s prior):
+
+        * already materialized in the store → ``hit_s`` (free at the
+          margin);
+        * live in a *running* submission's signature set → ``follow_s``
+          (a leader is producing it; a submission would lease-follow
+          rather than recompute — ``n_live_leases`` counts how many of
+          those are under an exclusive compute lease *right now*);
+        * wanted by other *queued* submissions → ``queued_shared_s``
+          (still marginal, but will be shared if co-scheduled);
+        * otherwise pure marginal compute.
+
+        ``marginal_s = total_s − hit_s − follow_s``. This is the search
+        driver's frontier-ordering signal (the ``estimate`` RPC): pick
+        the candidate with the least marginal compute, tie-breaking
+        toward the largest ``follow_s`` so followers draft behind live
+        leaders while the shared frontier is still hot. The estimate is
+        advisory — racing submissions can change it — and never mutates
+        server state (the candidate is *not* enqueued and its
+        signatures do not enter the multiplicity map).
+        """
+        wf = self._materialize_workflow(workflow, params)
+        dag = wf.build()
+        sigs = compute_signatures(dag, nonces=self.nonces)
+        sliced = dag.subgraph(slice_from_outputs(dag))
+        with self._cv:
+            inflight = self._inflight_sigs_locked()
+        total = hit = follow = queued_shared = 0.0
+        n_hit = n_follow = n_queued = n_lease = 0
+        seen: set[str] = set()
+        for n in sliced.topological():
+            sig = sigs[n]
+            if sig in seen:
+                continue
+            seen.add(sig)
+            c = self.cost_model.compute_cost(
+                sig, hint=sliced.nodes[n].cost_hint)
+            total += c
+            if self.store.has(sig):
+                hit += c
+                n_hit += 1
+            elif sig in inflight:
+                follow += c
+                n_follow += 1
+                if self.store.computing(sig):
+                    n_lease += 1
+            elif self.scheduler.multiplicity(sig) > 0:
+                queued_shared += c
+                n_queued += 1
+        return {
+            "workflow": wf.name, "n_nodes": len(seen),
+            "total_s": total, "marginal_s": total - hit - follow,
+            "hit_s": hit, "follow_s": follow,
+            "queued_shared_s": queued_shared,
+            "n_hit": n_hit, "n_follow": n_follow,
+            "n_queued_shared": n_queued, "n_live_leases": n_lease,
+        }
 
     def cancel(self, job: Job | str,
                reason: str = "cancelled by request") -> bool:
@@ -514,8 +660,15 @@ class SessionServer:
         snapshot["store_bytes"] = snapshot["tiers"]["local"]["bytes"]
         return snapshot
 
-    def job_summary(self, job: Job | str) -> dict:
-        """JSON-safe summary of one job (the ``job``/``wait`` RPCs)."""
+    def job_summary(self, job: Job | str, detail: bool = False) -> dict:
+        """JSON-safe summary of one job (the ``job``/``wait`` RPCs).
+
+        ``detail=True`` additionally lists the signatures the job
+        actually computed (planned COMPUTE and not deduped into a load)
+        and the subset of those that were *blind* computes (not the
+        planner's deliberate recompute-cheaper-than-load choice) — the
+        raw material for transport-agnostic fleet duplicate-compute
+        accounting (see ``SearchReport.wasted_recomputes``)."""
         j = job if isinstance(job, Job) else self._jobs[job]
         out: dict[str, Any] = {
             "job": j.id, "name": j.name, "status": j.status,
@@ -532,6 +685,14 @@ class SessionServer:
                 "total_seconds": round(ex.total_seconds, 6),
                 "mat_seconds": round(ex.mat_seconds, 6),
             }
+            if detail:
+                computed = [n for n, s in ex.states.items()
+                            if s is State.COMPUTE and n not in ex.deduped]
+                out["execution"]["computed_sigs"] = sorted(
+                    j.report.sigs[n] for n in computed)
+                out["execution"]["blind_computed_sigs"] = sorted(
+                    j.report.sigs[n] for n in computed
+                    if n not in ex.chose_compute)
             if j.report.evictions:
                 # Fleet evictor-stat deltas over this job's run window
                 # (the evictor is shared, so concurrent jobs' windows
@@ -592,20 +753,22 @@ class SessionServer:
             timer.start()
         try:
             sess = IterativeSession(
-                self.workdir, policy=self.policy,
-                storage_budget_bytes=self.storage_budget_bytes,
-                async_materialization=self.async_materialization,
-                horizon=self.horizon, max_workers=self.max_workers,
-                prefetch_depth=self.prefetch_depth,
-                dedupe_inflight=self.dedupe_inflight,
-                dedupe_wait_seconds=self.dedupe_wait_seconds,
-                shared_budget=True, purge_stale=self.purge_stale,
-                nondet_reusable=self.share_nondet,
+                self.workdir,
+                engine=dataclasses.replace(
+                    self.engine_config, horizon=self.horizon,
+                    share_nondet=self.share_nondet,
+                    dedupe_inflight=self.dedupe_inflight),
+                # The session reuses this server's store instance; its
+                # own remote-construction path must stay cold.
+                storage=dataclasses.replace(
+                    self.store_config, shared_budget=True,
+                    purge_stale=self.purge_stale, remote=None,
+                    evict_to_admit=self.evict_to_admit),
+                resilience=self.resilience_config,
                 store=self.store, cost_model=self.cost_model,
                 worker_pool=self.pool,
                 # One shared fleet evictor (live-multiplicity veto from
                 # the scheduler); None keeps refuse-on-exhausted.
-                evict_to_admit=self.evict_to_admit,
                 evictor=self.evictor,
                 # Observed amortization belongs to the globally-aware
                 # schedule; "fifo" keeps OMP purely static so it remains
@@ -870,7 +1033,9 @@ class SessionServer:
                     job = self.submit_named(msg.get("workflow", ""),
                                             msg.get("params"),
                                             name=msg.get("name"),
-                                            timeout=msg.get("timeout"))
+                                            timeout=msg.get("timeout"),
+                                            priority=int(
+                                                msg.get("priority", 0)))
                 except ServerBusy as e:
                     # Backpressure, not failure: the submit had no
                     # effect; the client should retry after the hint.
@@ -878,6 +1043,9 @@ class SessionServer:
                             "retry_after": e.retry_after,
                             "error": str(e)}
                 return {"ok": True, "job": job.id, "name": job.name}
+            if op == "estimate":
+                return {"ok": True, **self.estimate_marginal_cost(
+                    msg.get("workflow", ""), msg.get("params"))}
             if op == "cancel":
                 return {"ok": True,
                         "cancelled": self.cancel(str(msg.get("job", "")))}
@@ -893,7 +1061,8 @@ class SessionServer:
                     return {"ok": False, "error":
                             f"TimeoutError: job {job_id} still "
                             f"{job.status}"}
-                return {"ok": True, **self.job_summary(job)}
+                return {"ok": True, **self.job_summary(
+                    job, detail=bool(msg.get("detail")))}
             if op == "forget":
                 return {"ok": True,
                         "forgotten": self.forget(str(msg.get("job", "")))}
