@@ -36,6 +36,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
       tuner's marginal-cost frontier must compute measurably fewer
       nodes), plus a successive-halving run whose early-stopped arms
       must leave zero ledger drift and zero wasted recomputes.
+  bench_incremental         — ISSUE 8: daily retrain on an append-mostly
+      chunked census source: a 10 % append's spliced delta iteration
+      must land under 0.5x the cold full retrain, bit-identically
+      (writes results/bench/incremental.csv).
 
 Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list),
 HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine),
@@ -684,6 +688,61 @@ def bench_search_reuse() -> None:
           f"wasted={halved.wasted_recomputes()}", flush=True)
 
 
+def bench_incremental() -> None:
+    """ISSUE 8: daily-retrain on an append-mostly source — chunk-spliced
+    delta iteration vs. a cold full retrain of the same grown table.
+
+    Warm a store with an ``n_chunks``-chunk census table, append 10 %
+    (one chunk), retrain in the warm workdir (delta: map/assoc_reduce
+    nodes splice cached chunks, only the appended chunk runs) and in a
+    cold workdir (full recompute). Asserts the delta retrain lands under
+    0.5× the cold wall-clock and the outputs are bit-identical; writes
+    ``results/bench/incremental.csv``.
+
+    Env knobs: HELIX_BENCH_INC_CHUNKS (default 10),
+    HELIX_BENCH_INC_ROWS (rows per chunk, default 8000 — CI smoke
+    passes something small)."""
+    n_chunks = int(os.environ.get("HELIX_BENCH_INC_CHUNKS", "10"))
+    rows = int(os.environ.get("HELIX_BENCH_INC_ROWS", "8000"))
+    k0 = W.IncrementalCensusKnobs(n_chunks=n_chunks, rows_per_chunk=rows)
+    k1 = dataclasses.replace(k0, n_chunks=n_chunks + 1)   # +10 % append
+
+    def timed_run(workdir, knobs, reuse=False):
+        if not reuse:
+            shutil.rmtree(workdir, ignore_errors=True)
+        sess = IterativeSession(workdir, policy=Policy.ALWAYS,
+                                storage_budget_bytes=BUDGET)
+        t0 = time.perf_counter()
+        rep = sess.run(W.build_census_incremental(knobs))
+        return time.perf_counter() - t0, rep
+
+    warm_dir = os.path.join(ROOT, "incremental_warm")
+    warm_s, _ = timed_run(warm_dir, k0)
+    delta_s, delta_rep = timed_run(warm_dir, k1, reuse=True)
+    cold_s, cold_rep = timed_run(os.path.join(ROOT, "incremental_cold"),
+                                 k1)
+    assert delta_rep.outputs["dailyEval"] == cold_rep.outputs["dailyEval"], \
+        "delta retrain diverged from cold recompute"
+    spliced = sum(delta_rep.execution.chunk_reused.values())
+    recomputed = sum(delta_rep.execution.chunk_computed.values())
+    ratio = delta_s / max(cold_s, 1e-9)
+    os.makedirs(ROOT, exist_ok=True)
+    with open(os.path.join(ROOT, "incremental.csv"), "w") as f:
+        f.write("scenario,n_chunks,rows_per_chunk,seconds,"
+                "chunks_reused,chunks_recomputed\n")
+        f.write(f"warm,{n_chunks},{rows},{warm_s:.3f},0,{3 * n_chunks}\n")
+        f.write(f"delta,{n_chunks + 1},{rows},{delta_s:.3f},"
+                f"{spliced},{recomputed}\n")
+        f.write(f"cold,{n_chunks + 1},{rows},{cold_s:.3f},0,"
+                f"{3 * (n_chunks + 1)}\n")
+    print(f"incremental_daily_retrain,{delta_s * 1e6:.0f},"
+          f"delta_s={delta_s:.2f};cold_s={cold_s:.2f};"
+          f"ratio={ratio:.2f};spliced={spliced};recomputed={recomputed}",
+          flush=True)
+    assert ratio < 0.5, (
+        f"delta retrain {delta_s:.2f}s not under 0.5x cold {cold_s:.2f}s")
+
+
 def bench_engine_overlap() -> None:
     """Scheduler-overlap ceiling: a wide diamond of GIL-releasing 150 ms
     wait stubs (no CPU contention). Near-width× speedup means the ready-set
@@ -731,6 +790,7 @@ def main() -> None:
     bench_eviction()
     bench_remote_reuse()
     bench_search_reuse()
+    bench_incremental()
     bench_engine_overlap()
 
 

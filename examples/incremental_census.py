@@ -1,0 +1,63 @@
+"""Daily retrain on an append-mostly table: chunk-spliced recomputation.
+
+The streaming pattern the chunked materializations unlock: a census
+table grows by one day's batch of rows, and the retrain only pushes the
+*new* chunk through the map-safe featurization, splicing it into the
+cached per-chunk manifests — the model itself (opaque: gradient descent
+over all rows) still retrains on the assembled whole. Compare the delta
+day's wall time and per-node chunk counters against day 0.
+
+    PYTHONPATH=src:benchmarks python examples/incremental_census.py
+"""
+import dataclasses
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks"))
+
+import workflows as W                          # noqa: E402
+from repro.core import IterativeSession        # noqa: E402
+from repro.core.config import EngineConfig     # noqa: E402
+from repro.core.omp import Policy              # noqa: E402
+
+
+def show(title, rep, seconds):
+    ex = rep.execution
+    print(f"\n=== {title} ===")
+    print(f"  wall {seconds:.2f}s | computed {ex.n_computed}, "
+          f"loaded {ex.n_loaded}")
+    for n in sorted(set(ex.chunk_computed) | set(ex.chunk_reused)):
+        print(f"   {n:12s} chunks: {ex.chunk_computed.get(n, 0)} computed, "
+              f"{ex.chunk_reused.get(n, 0)} spliced from cache")
+    print(f"  eval: {rep.outputs['dailyEval']}")
+
+
+def main():
+    knobs = dataclasses.replace(W.IncrementalCensusKnobs(),
+                                n_chunks=6, rows_per_chunk=2_000)
+    with tempfile.TemporaryDirectory() as workdir:
+        sess = IterativeSession(workdir,
+                                engine=EngineConfig(policy=Policy.ALWAYS))
+
+        # Day 0: cold — every chunk of every chunked node computes.
+        t0 = time.perf_counter()
+        rep = sess.run(W.build_census_incremental(knobs))
+        show("day 0 (cold: all chunks computed)", rep,
+             time.perf_counter() - t0)
+
+        # Day 1: one batch appended. The chunked nodes compute exactly
+        # one new chunk each and splice the rest; only the opaque model
+        # + eval recompute whole.
+        knobs = dataclasses.replace(knobs, n_chunks=knobs.n_chunks + 1)
+        t0 = time.perf_counter()
+        rep = sess.run(W.build_census_incremental(knobs))
+        show("day 1 (append: delta chunks spliced)", rep,
+             time.perf_counter() - t0)
+
+
+if __name__ == "__main__":
+    main()

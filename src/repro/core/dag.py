@@ -53,6 +53,17 @@ class Node:
     # Optional a-priori compute-cost estimate in seconds (e.g. derived from a
     # dry-run roofline) used when no measured statistics exist yet.
     cost_hint: float | None = None
+    # Operator capability for incremental recomputation on data deltas
+    # (chunks.py): "map" (row-local, applies per chunk), "union"
+    # (row-concat of parents), "assoc_reduce" (chunk → partial, partials
+    # combine associatively), or None (opaque: whole-subtree recompute on
+    # any input change).
+    incremental: str | None = None
+    # Chunked sources only: one stable identity per data chunk (hash of
+    # the chunk's descriptor). Appending a batch appends an id; the
+    # prefix ids — and therefore the prefix chunk signatures — survive,
+    # which is what makes the delta the only new work.
+    chunk_ids: tuple[str, ...] | None = None
 
 
 class DAG:

@@ -102,7 +102,11 @@ class Evictor:
     # -- ranking -----------------------------------------------------------
     def _density(self, sig: str, ent: dict,
                  reuse_hist: dict[str, float]) -> float:
-        nbytes = max(float(ent.get("nbytes", 0) or 0), 1.0)
+        # A chunked manifest is priced (and evicted) as manifest+chunks:
+        # deleting it cascades to its unshared chunk entries, so its
+        # footprint for ranking is the whole partitioned value.
+        nbytes = max(float(ent.get("nbytes", 0) or 0)
+                     + float(ent.get("chunk_bytes", 0) or 0), 1.0)
         load_s = ent.get("load_s_est")
         if not load_s or load_s <= 0:
             load_s = self.store.est_load_seconds(nbytes)
@@ -140,8 +144,12 @@ class Evictor:
         least-recently-used (then oldest)."""
         reuse_hist = (self.cost_model.reuse_counts()
                       if self.cost_model is not None else {})
+        # Chunk entries never rank on their own: chunks ride with (and
+        # fall with) the manifests that reference them — the manifest is
+        # the eviction unit, and its delete cascade frees the chunks.
         scored = [(sig, ent, self._density(sig, ent, reuse_hist))
-                  for sig, ent in self.store.entries().items()]
+                  for sig, ent in self.store.entries().items()
+                  if not ent.get("is_chunk")]
         scored.sort(key=lambda it: (it[2], it[1].get("last_load")
                                     or it[1].get("created", 0.0)))
         return scored

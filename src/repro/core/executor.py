@@ -70,6 +70,7 @@ from typing import Any, Callable, Mapping
 
 import jax
 
+from .chunks import Chunked, tree_concat, tree_stack
 from .dag import DAG, State
 from .eviction import benefit_density
 from .omp import Materializer, cumulative_runtime
@@ -98,6 +99,12 @@ class ExecutionReport:
     # COMPUTE-planned nodes whose value was in fact loaded because another
     # session computed the same signature first (in-flight dedupe).
     deduped: dict[str, str] = dataclasses.field(default_factory=dict)
+    # Chunk-granular accounting (incremental recomputation, chunks.py):
+    # per chunked node, how many chunks ran fn vs. spliced from cache.
+    # On a pure-incremental path after an append, chunk_computed equals
+    # exactly the number of appended chunks — the oracle asserts this.
+    chunk_computed: dict[str, int] = dataclasses.field(default_factory=dict)
+    chunk_reused: dict[str, int] = dataclasses.field(default_factory=dict)
     # Nodes the planner chose to COMPUTE although a loadable entry existed
     # (recomputing was cheaper than loading). These are deliberate
     # economics, not missed reuse — fleet accounting (SweepReport)
@@ -137,7 +144,8 @@ class _Scheduler:
                  share_sigs: frozenset | set | None = None,
                  dedupe_skip: frozenset | set | None = None,
                  worker_pool=None,
-                 cancel: threading.Event | None = None):
+                 cancel: threading.Event | None = None,
+                 chunk_plans: Mapping | None = None):
         self.dag = dag
         self.sigs = sigs
         self.states = states
@@ -198,6 +206,15 @@ class _Scheduler:
         # Prefetch gate: loads in flight or resident-and-unconsumed.
         self.resident_loads = 0
         self.peak_resident_loads = 0
+
+        # Chunk-granular plans (chunks.py): COMPUTE nodes with a plan run
+        # per-chunk — cached chunks spliced in, missing ones recomputed —
+        # and *always* per-chunk even on a cold store, so results are a
+        # pure function of (chunk values, plan) and the differential
+        # oracle's bit-identity holds exactly.
+        self.chunk_plans = dict(chunk_plans or {})
+        self.chunk_computed: dict[str, int] = {}
+        self.chunk_reused: dict[str, int] = {}
 
         self.cache: dict[str, Any] = {}
         self.runtime: dict[str, float] = {}
@@ -268,11 +285,113 @@ class _Scheduler:
         return self._run_compute(name, node)
 
     def _run_compute(self, name: str, node) -> tuple[Any, float]:
+        plan = self.chunk_plans.get(name)
         with self.cv:
-            args = [self.cache[p] for p in node.parents]
+            raw = [self.cache[p] for p in node.parents]
+        if plan is not None:
+            t0 = time.perf_counter()
+            value = self._run_chunked(name, node, plan, raw)
+            return value, time.perf_counter() - t0
+        # Opaque consumers always see the assembled (logical) value: a
+        # chunked parent's partitioning is an executor-internal carrier.
+        args = [v.assemble() if isinstance(v, Chunked) else v for v in raw]
         t0 = time.perf_counter()
         value = _block(node.fn(*args))
         return value, time.perf_counter() - t0
+
+    # -- chunk-granular execution (incremental recomputation) --------------
+    def _chunk_from_store(self, csig: str):
+        """Load one cached chunk; ``(None, False)`` on miss (or when a
+        concurrent eviction raced the presence check — then it is simply
+        recomputed, same as a miss)."""
+        if not self.store.has_local(csig):
+            return None, False
+        try:
+            value, _secs = self.store.load(csig)
+        except FileNotFoundError:
+            return None, False
+        return value, True
+
+    def _run_chunked(self, name: str, node, plan, raw: list) -> Any:
+        """Execute one node at chunk granularity per its ChunkPlan.
+
+        Cached chunks (signature-keyed entries published by an earlier
+        iteration's splice) are loaded; missing chunks run ``fn``; the
+        pieces splice into a :class:`Chunked`. Per-chunk load/compute
+        seconds land in the node's single realized runtime — so the cost
+        model's recorded compute cost automatically reflects the *delta*,
+        which is what makes OMP re-price incrementally maintained nodes
+        correctly on the next iteration."""
+        n_reused = n_computed = 0
+        if plan.mode == "source":
+            cached = [self._chunk_from_store(cs) for cs in plan.chunk_sigs]
+            if all(hit for _v, hit in cached):
+                chunks = tuple(v for v, _hit in cached)
+                n_reused = len(chunks)
+            else:
+                produced = list(node.fn())
+                if len(produced) != plan.n_chunks:
+                    raise ValueError(
+                        f"{name}: chunked source returned {len(produced)} "
+                        f"chunks for {plan.n_chunks} declared descriptors")
+                # Prefer cached copies where present (bit-identical by the
+                # determinism contract; keeps splice I/O honest in counts).
+                chunks = tuple(v if hit else _block(produced[j])
+                               for j, (v, hit) in enumerate(cached))
+                n_reused = sum(1 for _v, hit in cached if hit)
+                n_computed = plan.n_chunks - n_reused
+            value = Chunked(chunks, plan.chunk_sigs)
+        elif plan.mode == "union":
+            parts = dict(zip(node.parents, raw))
+            chunks, csigs = [], []
+            for p in node.parents:
+                pv = parts[p]
+                if not isinstance(pv, Chunked):
+                    raise ValueError(
+                        f"{name}: union parent {p!r} is not chunked")
+                chunks.extend(pv.chunks)
+                csigs.extend(pv.chunk_sigs)
+            if tuple(csigs) != plan.chunk_sigs:
+                raise ValueError(
+                    f"{name}: union parents' chunk signatures do not "
+                    "match the plan (parent re-chunked mid-run?)")
+            n_reused = len(chunks)   # concat invokes no fn at all
+            value = Chunked(tuple(chunks), plan.chunk_sigs)
+        elif plan.mode in ("map", "assoc_reduce"):
+            chunked = {p: v for p, v in zip(node.parents, raw)
+                       if p in plan.chunked_parents}
+            broadcast = {p: (v.assemble() if isinstance(v, Chunked) else v)
+                         for p, v in zip(node.parents, raw)
+                         if p not in plan.chunked_parents}
+            pieces = []
+            for j, csig in enumerate(plan.chunk_sigs):
+                piece, hit = self._chunk_from_store(csig)
+                if hit:
+                    n_reused += 1
+                else:
+                    args = [chunked[p].chunks[j] if p in chunked
+                            else broadcast[p] for p in node.parents]
+                    piece = _block(node.fn(*args))
+                    n_computed += 1
+                pieces.append(piece)
+            if plan.mode == "map":
+                value = Chunked(tuple(pieces), plan.chunk_sigs)
+            else:
+                # Combine partials through fn itself, substituting the
+                # stacked partials for the chunked parent
+                # (fn(concat(chunks)) == fn(stack(partials))).
+                args = [tree_stack(pieces) if p in chunked
+                        else broadcast[p] for p in node.parents]
+                final = _block(node.fn(*args))
+                value = Chunked(tuple(pieces), plan.chunk_sigs,
+                                "reduce", final=final)
+        else:
+            raise ValueError(f"{name}: unknown chunk-plan mode "
+                             f"{plan.mode!r}")
+        with self.cv:
+            self.chunk_reused[name] = n_reused
+            self.chunk_computed[name] = n_computed
+        return value
 
     def _run_compute_deduped(self, name: str, node) -> tuple[Any, float]:
         """Fleet-wide compute-once: lease → compute (+ force-persist when
@@ -655,7 +774,8 @@ def execute(dag: DAG,
             share_sigs: frozenset | set | None = None,
             dedupe_skip: frozenset | set | None = None,
             worker_pool=None,
-            cancel: threading.Event | None = None) -> ExecutionReport:
+            cancel: threading.Event | None = None,
+            chunk_plans: Mapping | None = None) -> ExecutionReport:
     """Execute a planned DAG. See the module docstring for the scheduler
     model; ``max_workers=1`` reproduces the sequential paper engine
     exactly. ``dedupe_inflight`` enables the fleet-wide compute-once
@@ -668,7 +788,11 @@ def execute(dag: DAG,
     ``threading.Event``) requests cooperative cancellation: workers
     check it between nodes and inside lease waits, the run stops with
     :class:`JobCancelled`, and cleanup (pending saves, reservations,
-    leases) follows the same settle path any error takes."""
+    leases) follows the same settle path any error takes.
+    ``chunk_plans`` (``{name: ChunkPlan}`` from
+    ``compute_chunk_signatures``) turns on chunk-granular execution for
+    the planned nodes: cached chunks are spliced from the store and only
+    missing ones recomputed (see chunks.py)."""
     t_start = time.perf_counter()
     sched = _Scheduler(dag, sigs, states, store, materializer,
                        load_shardings, async_materialization,
@@ -678,9 +802,14 @@ def execute(dag: DAG,
                        share_sigs=share_sigs,
                        dedupe_skip=dedupe_skip,
                        worker_pool=worker_pool,
-                       cancel=cancel)
+                       cancel=cancel,
+                       chunk_plans=chunk_plans)
     sched.run()
-    outputs = {n: sched.cache[n] for n in dag.outputs() if n in sched.cache}
+    # Outputs are always the logical values: the chunk partitioning is an
+    # executor/store-internal carrier, invisible to session callers.
+    outputs = {n: (v.assemble() if isinstance(v, Chunked) else v)
+               for n, v in ((n, sched.cache[n]) for n in dag.outputs()
+                            if n in sched.cache)}
     return ExecutionReport(
         states=dict(states), runtime=sched.runtime,
         materialized=sched.materialized, skipped_mat=sched.skipped,
@@ -689,4 +818,6 @@ def execute(dag: DAG,
         max_workers=sched.max_workers,
         peak_resident_loads=sched.peak_resident_loads,
         deduped=sched.deduped,
-        chose_compute=frozenset(dedupe_skip or ()))
+        chose_compute=frozenset(dedupe_skip or ()),
+        chunk_computed=sched.chunk_computed,
+        chunk_reused=sched.chunk_reused)

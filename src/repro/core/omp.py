@@ -83,6 +83,30 @@ class MatDecision:
     benefit_density: float | None = None
 
 
+def delta_fraction(plan, store) -> float:
+    """Fraction of a chunked node's work an execution will actually run.
+
+    For a node with a :class:`~repro.core.chunks.ChunkPlan`, the executor
+    recomputes only the chunks whose signatures are not in the store, so
+    the expected compute cost on this iteration is not the historical
+    whole-value cost c_i but
+
+        c_i^Δ  =  c_i · (missing chunks / total chunks)
+
+    (uniform-chunk approximation; chunks are same-sized appends in the
+    daily-retrain scenario). Planning with c_i^Δ is what lets OEP choose
+    COMPUTE-and-splice over loading a stale whole-value entry, and makes
+    OMP's (1 + 1/h)·l_i < C(n_i) price the *delta* on the cost side —
+    the paper's inequality unchanged, evaluated against incremental
+    reality. Returns 1.0 for an empty plan (degenerate, never emitted by
+    ``compute_chunk_plans``) so a bad plan can only over-estimate cost.
+    """
+    if plan.n_chunks == 0:
+        return 1.0
+    missing = sum(1 for cs in plan.chunk_sigs if not store.has_local(cs))
+    return missing / plan.n_chunks
+
+
 def cumulative_runtime(dag: DAG, name: str,
                        states: Mapping[str, State],
                        runtime: Mapping[str, float]) -> float:

@@ -26,11 +26,12 @@ from .dag import State
 from .eviction import Evictor
 from .executor import ExecutionReport, execute
 from .locking import StorageLedger
-from .omp import Materializer, Policy
+from .chunks import protected_chunk_sigs
+from .omp import Materializer, Policy, delta_fraction
 from .oep import plan
-from .pruning import slice_from_outputs
+from .pruning import slice_from_outputs, stale_variants
 from .remote import ObjectStore, RemoteStore, as_remote_store
-from .signature import compute_signatures
+from .signature import compute_chunk_signatures, compute_signatures
 from .store import Store
 from .workflow import Workflow
 
@@ -274,6 +275,12 @@ class IterativeSession:
         keep = slice_from_outputs(dag)
         sliced = dag.subgraph(keep)
 
+        # Chunk-granular refinement (chunks.py): per-chunk signatures for
+        # every node they can flow to. Incrementally maintainable nodes
+        # execute per-chunk, splicing cached chunks; everything else
+        # keeps the paper's whole-value semantics.
+        chunk_plans = compute_chunk_signatures(sliced, sigs)
+
         # One store stat per node per planning pass (shared NFS-style
         # workdirs make metadata I/O expensive; the two uses below must
         # also agree on one snapshot).
@@ -297,9 +304,22 @@ class IterativeSession:
             node = sliced.nodes[n]
             compute_cost[n] = self.cost_model.compute_cost(
                 sigs[n], hint=node.cost_hint)
+            if n in chunk_plans:
+                # Incremental pricing: the executor will recompute only
+                # the store-missing chunks, so the expected cost this
+                # iteration is the historical whole-value cost scaled by
+                # the missing fraction (omp.delta_fraction). After an
+                # append this is what makes OEP prefer compute-and-splice
+                # over loading a stale whole-value entry.
+                compute_cost[n] *= delta_fraction(chunk_plans[n],
+                                                  self.store)
             if in_store[n]:
                 meta = self.store.meta(sigs[n])
-                load_cost[n] = self.store.est_load_seconds(meta["nbytes"])
+                # A chunked manifest's own nbytes is metadata-sized; the
+                # load cost that matters is manifest + referenced chunks.
+                nb = (meta["nbytes"]
+                      + meta.get("chunked", {}).get("chunk_bytes", 0))
+                load_cost[n] = self.store.est_load_seconds(nb)
             else:
                 load_cost[n] = None
 
@@ -330,11 +350,15 @@ class IterativeSession:
             # sibling variants' same-name entries are not stale.
             purged = 0
             if self.purge_stale:
+                # keep_chunks: a stale chunked manifest (pre-append
+                # variant of a node this iteration re-derives) shares its
+                # prefix chunks with the manifest about to be spliced —
+                # the manifest goes, the still-valid chunks stay.
+                protected = protected_chunk_sigs(chunk_plans)
                 by_name = self.store.sigs_by_name()
-                for n in original:
-                    for old_sig in by_name.get(n, []):
-                        if old_sig != sigs[n]:
-                            purged += self.store.delete(old_sig)
+                for old_sig in stale_variants(by_name, original, sigs):
+                    purged += self.store.delete(old_sig,
+                                                keep_chunks=protected)
                 # Foreign credit: the purged entries may have been paid
                 # for by a previous session — this instance never
                 # reserved those bytes, so the credit must not shrink
@@ -352,6 +376,7 @@ class IterativeSession:
                 share_sigs=share_sigs,
                 worker_pool=self.worker_pool,
                 cancel=cancel,
+                chunk_plans=chunk_plans,
                 # Planner chose COMPUTE although a load existed — loading
                 # is costlier there; the dedupe shortcut must not undo it.
                 dedupe_skip={n for n, s in states.items()

@@ -46,6 +46,29 @@ def compute_signatures(dag: DAG, nonces: dict[str, str] | None = None
     return sigs
 
 
+def compute_chunk_signatures(dag: DAG, sigs: dict[str, str]) -> dict:
+    """Chunk-level refinement of :func:`compute_signatures`.
+
+    Where the full signature answers "is this node's whole output
+    equivalent to a prior run?", the chunk signature answers it *per data
+    chunk*:
+
+        chunk_sig(n, j) = H(name, kind, version,
+                            [chunk_sig(p, j) for chunked parents],
+                            [sig(p) for broadcast parents])
+
+    seeded at chunked sources by H(name, kind, chunk_id_j) — the source
+    ``version`` (which changes on every append) is deliberately left out,
+    so the pre-append prefix keeps its chunk signatures and only the
+    appended chunks are new work. Returns ``{node name:
+    :class:`~repro.core.chunks.ChunkPlan`}`` for every node chunk
+    signatures can flow to; all derivation rules live in
+    :func:`repro.core.chunks.compute_chunk_plans`.
+    """
+    from .chunks import compute_chunk_plans
+    return compute_chunk_plans(dag, sigs)
+
+
 def source_version(obj) -> str:
     """Hash an arbitrary config/source blob into a version string.
 

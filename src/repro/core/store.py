@@ -65,6 +65,20 @@ in one process or independent OS processes:
   remote eviction can yank another host's plan. If the remote backend
   errors, the tier degrades to local-only for a cool-down window — the
   host keeps working (docs/operations.md, failure modes).
+* **Chunk-partitioned materializations** (chunks.py): saving a
+  :class:`~repro.core.chunks.Chunked` value publishes each chunk as an
+  ordinary signature-keyed entry (``is_chunk`` meta) plus a small
+  *manifest* entry under the node's full signature whose ``chunked``
+  meta lists the chunk signatures. Loading the manifest reassembles the
+  chunks; deleting it cascades to chunks no other manifest references
+  (``keep_chunks`` protects the chunks an upcoming delta will splice);
+  ``gc_orphan_chunks`` reclaims chunks stranded by a crash between
+  chunk publish and manifest publish (the manifest is the commit point:
+  readers never see a partial splice). Ledger accounting stays per
+  chunk — every ``SaveInfo``/``delete`` byte count is exactly the bytes
+  that appeared on or left the disk, so ledger == disk is preserved.
+  Chunked entries are local-tier only (manifests and chunks are not
+  uploaded to the remote tier).
 """
 from __future__ import annotations
 
@@ -85,6 +99,7 @@ import numpy as np
 
 import jax
 
+from .chunks import Chunked
 from .locking import (FileLock, SharedEwma, StorageLedger, read_json,
                       update_json)
 from .remote import RemoteStore
@@ -288,6 +303,11 @@ class Store:
         self._uploads_inflight = 0
         # local loads served by a remote fetch (read-through populates)
         self.remote_hits = 0
+        # Optional fault-injection plan (faults.FaultPlan): consulted at
+        # the named crash points of the chunked-splice publish path
+        # (``splice:chunk_published``, ``splice:before_manifest``).
+        # Production runs leave it None and pay one ``is None`` check.
+        self.faults = None
         if heal:
             self._reap_stale_tmp()
             self._reap_fleet_metadata()
@@ -469,8 +489,15 @@ class Store:
             return False
 
     # -- save ------------------------------------------------------------------
+    def _crash_point(self, point: str) -> None:
+        """Consult the attached fault plan (no-op without one)."""
+        if self.faults is not None:
+            self.faults.crash_point(point)
+
     def save(self, sig: str, name: str, value: Any,
              extra_meta: dict | None = None) -> SaveInfo:
+        if isinstance(value, Chunked):
+            return self._save_chunked(sig, name, value, extra_meta)
         t0 = time.perf_counter()
         host_value = jax.tree_util.tree_map(_leaf_to_host, value)
         d = self._dir(sig)
@@ -539,6 +566,63 @@ class Store:
         self._enqueue_upload(sig, meta)
         return SaveInfo(nbytes=nbytes, seconds=seconds, replaced=replaced,
                         replaced_nbytes=replaced_nbytes)
+
+    def _save_chunked(self, sig: str, name: str, value: Chunked,
+                      extra_meta: dict | None = None) -> SaveInfo:
+        """Publish a partitioned materialization: per-chunk entries first,
+        then the manifest under the node's full signature.
+
+        The manifest is the *commit point* — until it publishes, readers
+        see nothing (``has(sig)`` is false), so a crash mid-splice leaves
+        only orphan chunk entries for :meth:`gc_orphan_chunks` and a
+        retry republishes bit-identically (chunks are content-addressed;
+        already-present ones are skipped, not rewritten). The returned
+        ``SaveInfo.nbytes`` counts exactly the bytes this call added to
+        disk (new chunks + manifest), which is what keeps the fleet
+        ledger equal to on-disk bytes."""
+        t0 = time.perf_counter()
+        new_bytes = 0
+        chunk_bytes = 0
+        try:
+            for csig, chunk in zip(value.chunk_sigs, value.chunks):
+                if self.has_local(csig):
+                    try:
+                        chunk_bytes += int(self.meta(csig).get("nbytes", 0))
+                        continue
+                    except (FileNotFoundError, json.JSONDecodeError):
+                        pass  # raced a delete — republish below
+                info = self.save(csig, f"{name}#chunk", chunk,
+                                 extra_meta={"is_chunk": True})
+                new_bytes += info.nbytes
+                if info.replaced:
+                    new_bytes -= info.replaced_nbytes
+                chunk_bytes += info.nbytes
+                self._crash_point("splice:chunk_published")
+            self._crash_point("splice:before_manifest")
+            extra = dict(extra_meta or {})
+            extra["chunked"] = {"combine": value.combine,
+                                "chunk_sigs": list(value.chunk_sigs),
+                                "chunk_bytes": chunk_bytes}
+            # Reduce manifests carry the combined value as their own
+            # payload (loading one returns the final value directly);
+            # concat manifests carry no payload — their value *is* the
+            # chunk set.
+            payload = value.final if value.combine == "reduce" else ()
+            info = self.save(sig, name, payload, extra_meta=extra)
+        except BaseException:
+            # The chunks published so far are committed entries that stay
+            # on disk (a retry dedupes them; gc_orphan_chunks reclaims
+            # them if no retry comes), but the caller releases its whole
+            # reservation on failure — adjust their bytes in so the fleet
+            # ledger keeps mirroring the disk (the same honesty-over-
+            # overshoot call as the read-through populate).
+            if new_bytes and os.path.exists(self.ledger_path):
+                StorageLedger(self.ledger_path).adjust(float(new_bytes))
+            raise
+        return SaveInfo(nbytes=new_bytes + info.nbytes,
+                        seconds=time.perf_counter() - t0,
+                        replaced=info.replaced,
+                        replaced_nbytes=info.replaced_nbytes)
 
     def _retire_dir(self, d: str) -> None:
         """Crash-safe removal: rename the entry dir to a staging name (so
@@ -651,8 +735,15 @@ class Store:
     # -- remote tier (write-through / read-through) ------------------------
     def _enqueue_upload(self, sig: str, meta: dict) -> None:
         """Queue one published entry for async upload to the remote
-        tier (no-op without one, or while it is degraded)."""
+        tier (no-op without one, or while it is degraded). Chunked
+        manifests and chunk entries stay in the local tier: a manifest
+        names chunk signatures by reference, so shipping it without a
+        transactional multi-entry upload would let a remote reader see
+        a manifest whose chunks don't exist — a documented local-tier
+        limitation for now."""
         if self.remote is None or not self.remote.available():
+            return
+        if meta.get("chunked") or meta.get("is_chunk"):
             return
         with self._upload_cv:
             self._upload_queue.append((sig, meta))
@@ -697,6 +788,9 @@ class Store:
                 meta = json.load(f)
         except (OSError, json.JSONDecodeError):
             return False
+        if meta.get("chunked") or meta.get("is_chunk"):
+            return False   # chunked entries are local-tier only
+
         with self._upload_cv:
             # The save that published this entry already queued an async
             # upload; cancel it so the entry's bytes don't cross the
@@ -795,6 +889,19 @@ class Store:
         d = self._dir(sig)
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
+        ch = meta.get("chunked")
+        if ch and ch.get("combine") == "concat":
+            # Partitioned materialization: reassemble from the per-chunk
+            # entries (each load updates bandwidth/reuse stats itself; no
+            # manifest-level bandwidth sample — its payload is empty).
+            # Reduce manifests fall through: their payload *is* the
+            # combined value.
+            chunks = []
+            for cs in ch["chunk_sigs"]:
+                v, _ = self.load(cs)
+                chunks.append(v)
+            value = Chunked(chunks, ch["chunk_sigs"], "concat")
+            return value, time.perf_counter() - t0
         with open(os.path.join(d, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
 
@@ -1075,7 +1182,8 @@ class Store:
                     return marker
             raise
 
-    def delete(self, sig: str, respect_leases: bool = True) -> int:
+    def delete(self, sig: str, respect_leases: bool = True,
+               keep_chunks: "frozenset | set | tuple" = ()) -> int:
         """Remove an entry; returns bytes freed (0 if absent or leased).
 
         With ``respect_leases`` (default), entries another session is
@@ -1083,12 +1191,21 @@ class Store:
         — fleet eviction must not yank values out from under a live
         session. The exclusive lease is *held* for the duration of the
         removal (not probed and dropped), so a read pin can never slip in
-        between the check and the delete."""
+        between the check and the delete.
+
+        Deleting a chunked *manifest* cascades to its chunk entries —
+        except chunks another manifest still references, and chunks in
+        ``keep_chunks`` (the §6.6 purge passes the chunk signatures the
+        upcoming delta will splice from, so a stale manifest's removal
+        never strands its still-valid sibling chunks). The returned byte
+        count includes the cascade, so ledger credits stay equal to the
+        bytes that actually left the disk."""
         lease_guard = None
         if respect_leases:
             lease_guard = FileLock(self._lease_path(sig))
             if not lease_guard.acquire(blocking=False):
                 return 0
+        chunk_sigs: list | None = None
         try:
             with self._entry_lock(sig):
                 d = self._dir(sig)
@@ -1096,15 +1213,65 @@ class Store:
                     return 0
                 try:
                     with open(os.path.join(d, "meta.json")) as f:
-                        nbytes = json.load(f).get("nbytes", 0)
+                        meta = json.load(f)
+                    nbytes = meta.get("nbytes", 0)
+                    chunk_sigs = meta.get("chunked", {}).get("chunk_sigs")
                 except (FileNotFoundError, json.JSONDecodeError):
                     nbytes = 0
                 self._retire_dir(d)
                 self._index_apply(remove=[sig])
-                return nbytes
         finally:
             if lease_guard is not None:
                 lease_guard.release()
+        if chunk_sigs:
+            nbytes += self._reap_unreferenced_chunks(
+                chunk_sigs, keep_chunks, respect_leases)
+        return nbytes
+
+    def _reap_unreferenced_chunks(self, chunk_sigs, keep_chunks,
+                                  respect_leases: bool) -> int:
+        """Delete the given chunk entries unless some surviving manifest
+        still references them (sibling variants share prefix chunks) or
+        the caller asked to keep them. Two concurrent manifest deletes
+        can each see the other's manifest alive and both skip a chunk —
+        that orphan is :meth:`gc_orphan_chunks`'s job, never a lost
+        value."""
+        referenced: set = set()
+        for ent in self.entries().values():
+            referenced.update(ent.get("chunk_sigs", ()))
+        freed = 0
+        for cs in dict.fromkeys(chunk_sigs):
+            if cs in keep_chunks or cs in referenced:
+                continue
+            freed += self.delete(cs, respect_leases=respect_leases)
+        return freed
+
+    def gc_orphan_chunks(self, min_age_seconds: float = 3600.0
+                         ) -> tuple[int, int]:
+        """Reclaim chunk entries no manifest references.
+
+        Orphans come from a crash between chunk publish and manifest
+        publish (the manifest is the splice's commit point) and from
+        concurrent manifest deletes racing each other's reference scans.
+        ``min_age_seconds`` protects in-flight splices — a live save may
+        have published chunks whose manifest is milliseconds away.
+        Returns ``(entries_reclaimed, bytes_reclaimed)``; callers credit
+        the bytes to their ledger (the evictor's ``credit`` path)."""
+        entries = self.entries()
+        referenced = {cs for ent in entries.values()
+                      for cs in ent.get("chunk_sigs", ())}
+        now = time.time()
+        n = freed = 0
+        for sig, ent in entries.items():
+            if not ent.get("is_chunk") or sig in referenced:
+                continue
+            if now - float(ent.get("created", now)) < min_age_seconds:
+                continue
+            nbytes = self.delete(sig)
+            if nbytes > 0:
+                n += 1
+                freed += nbytes
+        return n, freed
 
     # -- on-disk index ------------------------------------------------------------
     @staticmethod
@@ -1118,6 +1285,15 @@ class Store:
         for key in ("compute_s", "load_s_est", "loads", "last_load"):
             if key in meta:
                 out[key] = meta[key]
+        # Chunk bookkeeping, mirrored so manifest↔chunk reference scans
+        # (delete cascade, gc_orphan_chunks, evictor sizing) are one
+        # index read instead of N meta.json opens.
+        if meta.get("is_chunk"):
+            out["is_chunk"] = True
+        ch = meta.get("chunked")
+        if ch:
+            out["chunk_sigs"] = list(ch.get("chunk_sigs", ()))
+            out["chunk_bytes"] = ch.get("chunk_bytes", 0)
         return out
 
     def _index_apply(self, add: dict[str, dict] | None = None,

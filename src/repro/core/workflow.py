@@ -57,16 +57,46 @@ class Workflow:
     def node(self, name: str, fn: Callable, inputs: Iterable = (),
              kind: Kind = Kind.EXTRACTOR, config: Any = None,
              uses: Iterable = (), deterministic: bool = True,
-             cost_hint: float | None = None) -> Ref:
+             cost_hint: float | None = None,
+             incremental: str | None = None,
+             chunk_ids: tuple[str, ...] | None = None) -> Ref:
+        """Declare one operator output.
+
+        ``incremental`` declares how the operator transforms per-chunk —
+        ``"map"`` (row-local), ``"union"`` (row-concat of its parents) or
+        ``"assoc_reduce"`` (chunk → partial, partials combine
+        associatively) — enabling chunk-granular reuse on data deltas
+        (see chunks.py for the exact contracts). ``None`` (default)
+        keeps the operator opaque: any input change recomputes it whole.
+        """
+        if incremental not in (None, "map", "union", "assoc_reduce"):
+            raise ValueError(
+                f"{name}: incremental={incremental!r} is not one of "
+                "'map', 'union', 'assoc_reduce', None")
         parents = _names(inputs) + _names(uses)
         self._nodes.append(Node(
             name=name, fn=fn, parents=parents, kind=kind,
             version=source_version(config),
-            deterministic=deterministic, cost_hint=cost_hint))
+            deterministic=deterministic, cost_hint=cost_hint,
+            incremental=incremental,
+            chunk_ids=tuple(chunk_ids) if chunk_ids else None))
         return Ref(name)
 
     # -- HML-style sugar -----------------------------------------------------------
-    def source(self, name, fn, config=None, **kw) -> Ref:
+    def source(self, name, fn, config=None, chunks=None, **kw) -> Ref:
+        """Declare a data source. ``chunks`` (an iterable of per-chunk
+        descriptors, e.g. ``[(seed, n_rows), ...]``) declares an
+        append-mostly *chunked* source: ``fn`` must then return one value
+        per descriptor (a list), ``config`` defaults to the descriptor
+        tuple, and each chunk's identity is the hash of its descriptor —
+        so appending a batch leaves the existing chunks' identities (and
+        downstream chunk signatures) intact."""
+        if chunks is not None:
+            chunks = tuple(chunks)
+            if config is None:
+                config = chunks
+            kw = dict(kw, chunk_ids=tuple(source_version(c)
+                                          for c in chunks))
         return self.node(name, fn, (), Kind.SOURCE, config, **kw)
 
     def scanner(self, name, fn, inputs, config=None, **kw) -> Ref:

@@ -5,6 +5,19 @@ learned discretization (bucket boundaries from data — a *learned* DPR
 function in the paper's taxonomy), one-hot encoding, interaction features,
 and the example-assembly synthesizer that concatenates feature vectors and
 records per-extractor provenance (used for data-driven pruning §5.4).
+
+Incremental-capability notes (chunks.py): ``one_hot``, ``interact`` and
+``fixed_bucketize`` are row-local — safe to declare ``incremental="map"``
+on the nodes that wrap them. ``bucketize`` (quantile boundaries *learned
+from the whole column*) and ``standardize`` (global mean/std) are NOT
+maps: their output for row r depends on every other row, so the nodes
+wrapping them must stay opaque (whole-recompute on any append).
+
+The ``census_chunk_descriptors`` / ``load_census_chunks`` pair models an
+append-mostly table for chunked sources: each descriptor is a stable
+``(seed, n_rows)`` identity, a daily append appends one descriptor, and
+the loader generates one column-dict per descriptor — so a chunked
+``Workflow.source`` keeps its prefix chunk signatures across appends.
 """
 from __future__ import annotations
 
@@ -31,6 +44,32 @@ def interact(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Interaction feature: outer product of two one-hot blocks."""
     n = len(a)
     return (a[:, :, None] * b[:, None, :]).reshape(n, -1)
+
+
+def fixed_bucketize(values: np.ndarray, edges) -> np.ndarray:
+    """Row-local discretizer: *fixed* bin edges, so (unlike ``bucketize``)
+    each row's bucket is independent of the rest of the column — map-safe
+    for chunked execution."""
+    return np.digitize(values, np.asarray(edges)).astype(np.int32)
+
+
+def census_chunk_descriptors(seed: int, n_chunks: int,
+                             rows_per_chunk: int) -> list[tuple[int, int]]:
+    """Stable per-chunk identities for an append-mostly census table.
+
+    Descriptor ``i`` is ``(seed + i, rows_per_chunk)``; appending a day's
+    batch means appending one descriptor, which leaves every existing
+    descriptor — and therefore every existing chunk signature — intact."""
+    return [(seed + i, rows_per_chunk) for i in range(n_chunks)]
+
+
+def load_census_chunks(descriptors) -> list[dict]:
+    """Source fn for ``Workflow.source(..., chunks=descriptors)``: one
+    synthetic census column-dict per descriptor (deterministic per
+    descriptor, so a regenerated chunk is bit-identical to its cached
+    copy)."""
+    from . import synth
+    return [synth.census_rows(s, n) for s, n in descriptors]
 
 
 def standardize(values: np.ndarray) -> np.ndarray:

@@ -50,11 +50,11 @@ from ..core.dag import State
 from ..core.eviction import Evictor
 from ..core.executor import JobCancelled
 from ..core.locking import StorageLedger
-from ..core.omp import Policy
+from ..core.omp import Policy, delta_fraction
 from ..core.pruning import slice_from_outputs
 from ..core.remote import ObjectStore, RemoteStore, as_remote_store
 from ..core.session import IterationReport, IterativeSession
-from ..core.signature import compute_signatures
+from ..core.signature import compute_chunk_signatures, compute_signatures
 from ..core.store import Store
 from ..core.workflow import Workflow
 from .pool import SharedWorkerPool
@@ -512,15 +512,25 @@ class SessionServer:
         advisory — racing submissions can change it — and never mutates
         server state (the candidate is *not* enqueued and its
         signatures do not enter the multiplicity map).
+
+        Chunk-granular pricing: a node with a chunk plan (chunks.py) is
+        priced at its *delta* — the historical whole-value cost scaled
+        by the fraction of its chunks missing from the store
+        (``omp.delta_fraction``), exactly how the session will execute
+        it. A daily-retrain submission whose source gained one chunk
+        therefore estimates near the appended batch's cost, not a cold
+        retrain; ``n_chunked`` counts delta-priced nodes and
+        ``chunk_hit_s`` the per-chunk savings folded into ``hit_s``.
         """
         wf = self._materialize_workflow(workflow, params)
         dag = wf.build()
         sigs = compute_signatures(dag, nonces=self.nonces)
         sliced = dag.subgraph(slice_from_outputs(dag))
+        chunk_plans = compute_chunk_signatures(sliced, sigs)
         with self._cv:
             inflight = self._inflight_sigs_locked()
-        total = hit = follow = queued_shared = 0.0
-        n_hit = n_follow = n_queued = n_lease = 0
+        total = hit = follow = queued_shared = chunk_hit = 0.0
+        n_hit = n_follow = n_queued = n_lease = n_chunked = 0
         seen: set[str] = set()
         for n in sliced.topological():
             sig = sigs[n]
@@ -538,9 +548,18 @@ class SessionServer:
                 n_follow += 1
                 if self.store.computing(sig):
                     n_lease += 1
-            elif self.scheduler.multiplicity(sig) > 0:
-                queued_shared += c
-                n_queued += 1
+            else:
+                if self.scheduler.multiplicity(sig) > 0:
+                    queued_shared += c
+                    n_queued += 1
+                if n in chunk_plans:
+                    # Compute-and-splice: only the missing chunks run.
+                    frac = delta_fraction(chunk_plans[n], self.store)
+                    if frac < 1.0:
+                        saved = c * (1.0 - frac)
+                        hit += saved
+                        chunk_hit += saved
+                        n_chunked += 1
         return {
             "workflow": wf.name, "n_nodes": len(seen),
             "total_s": total, "marginal_s": total - hit - follow,
@@ -548,6 +567,7 @@ class SessionServer:
             "queued_shared_s": queued_shared,
             "n_hit": n_hit, "n_follow": n_follow,
             "n_queued_shared": n_queued, "n_live_leases": n_lease,
+            "n_chunked": n_chunked, "chunk_hit_s": chunk_hit,
         }
 
     def cancel(self, job: Job | str,

@@ -33,8 +33,11 @@ import numpy as np
 import pytest
 
 from repro.core import IterativeSession, compute_signatures
+from repro.core.chunks import Chunked
+from repro.core.config import EngineConfig, StoreConfig
 from repro.core.executor import JobCancelled
 from repro.core.faults import ChaosObjectStore, FaultPlan, InjectedCrash
+from repro.core.omp import Policy
 from repro.core.locking import HAVE_FLOCK, StorageLedger
 from repro.core.remote import (FsObjectStore, RemoteStore,
                                TransientBackendError)
@@ -224,6 +227,107 @@ def test_interrupted_delete_leaves_only_invisible_orphans(tmp_path):
     assert backend.list("entries/cd34/") == []
     reader.close()
     remote.close()
+
+
+# -- torn chunk splices (local-tier analogue of torn uploads) ----------------
+
+def _chunked_value(n: int = 3) -> Chunked:
+    chunks = [np.arange(6, dtype=np.float64) * (i + 1) for i in range(n)]
+    return Chunked(chunks=chunks,
+                   chunk_sigs=tuple(f"ch{i:02d}" for i in range(n)))
+
+
+def test_crash_before_manifest_leaves_invisible_chunks_then_gc(tmp_path):
+    """Crash after every chunk published but before the manifest — the
+    splice's commit point. Readers see nothing under the full signature;
+    the orphaned chunks are age-gated GC fodder; a retry commits a
+    bit-identical materialization."""
+    store = Store(str(tmp_path / "store"))
+    store.faults = FaultPlan(seed=CHAOS_SEED).crash_at(
+        "splice:before_manifest")
+    value = _chunked_value()
+    with pytest.raises(InjectedCrash):
+        store.save("full-sig", "node", value)
+
+    # Invisible: no manifest, so the full signature does not exist —
+    # but the chunk entries really are on disk.
+    assert not store.has_local("full-sig")
+    orphans = [s for s, e in store.entries().items() if e.get("is_chunk")]
+    assert len(orphans) == 3
+    # Age-gated: young chunks are spared (maybe a splice in flight) …
+    assert store.gc_orphan_chunks(min_age_seconds=3600.0) == (0, 0)
+    # … old ones are reclaimed.
+    n, freed = store.gc_orphan_chunks(min_age_seconds=0.0)
+    assert n == 3 and freed > 0
+    assert store.total_bytes() == 0
+
+    # The retried splice (crash point disarmed) commits normally.
+    store.save("full-sig", "node", value)
+    out, _ = store.load("full-sig")
+    assert out.assemble().tobytes() == value.assemble().tobytes()
+
+
+def test_crash_mid_chunk_publish_retry_is_dedup_aware(tmp_path):
+    """Crash after the second of three chunks published. The retry must
+    skip the already-present chunks (content-addressed dedup) and its
+    SaveInfo must count exactly the bytes it added to disk — the
+    property the fleet ledger relies on."""
+    store = Store(str(tmp_path / "store"))
+    store.faults = FaultPlan(seed=CHAOS_SEED).crash_at(
+        "splice:chunk_published", nth=2)
+    value = _chunked_value()
+    with pytest.raises(InjectedCrash):
+        store.save("full-sig", "node", value)
+    assert not store.has_local("full-sig")
+    assert sum(1 for e in store.entries().values()
+               if e.get("is_chunk")) == 2
+
+    before = store.total_bytes()
+    info = store.save("full-sig", "node", value)
+    assert info.nbytes == store.total_bytes() - before   # dedup-aware
+    out, _ = store.load("full-sig")
+    assert out.assemble().tobytes() == value.assemble().tobytes()
+    # Referenced chunks are no longer orphans: GC must spare them all.
+    assert store.gc_orphan_chunks(min_age_seconds=0.0) == (0, 0)
+
+
+def test_session_splice_crash_retry_commits_bit_identical(tmp_path):
+    """End-to-end: a delta run dies mid-splice; the surviving partial
+    state is invisible to readers, the retried run commits bit-identical
+    to a cold recompute, and the fleet ledger equals on-disk bytes."""
+    def build(descs):
+        wf = Workflow("splice")
+        src = wf.source(
+            "src", lambda d=list(descs):
+            [np.random.default_rng(s).standard_normal(n) for s, n in d],
+            chunks=list(descs))
+        m = wf.extractor("m", lambda x: np.cos(x), [src],
+                         config="m", incremental="map")
+        wf.output(m)
+        return wf
+
+    def session(path):
+        return IterativeSession(path,
+                                engine=EngineConfig(policy=Policy.ALWAYS),
+                                storage=StoreConfig(shared_budget=True))
+
+    sess = session(str(tmp_path / "inc"))
+    d0 = [(1, 20), (2, 20)]
+    sess.run(build(d0))
+    d1 = d0 + [(3, 20)]
+    sess.store.faults = FaultPlan(seed=CHAOS_SEED).crash_at(
+        "splice:before_manifest")
+    with pytest.raises(InjectedCrash):
+        sess.run(build(d1))
+    sess.store.faults = None
+
+    rep = sess.run(build(d1))
+    cold = session(str(tmp_path / "cold"))
+    crep = cold.run(build(d1))
+    assert np.asarray(rep.outputs["m"]).tobytes() \
+        == np.asarray(crep.outputs["m"]).tobytes()
+    assert StorageLedger(sess.store.ledger_path).used() \
+        == pytest.approx(float(sess.store.total_bytes()))
 
 
 # -- lease takeover after a crash --------------------------------------------

@@ -1,0 +1,340 @@
+"""Differential-testing oracle for incremental recomputation (chunks.py).
+
+The property under test: for ANY workflow DAG mixing incrementalizable
+(map / union / assoc_reduce) and opaque operators, and ANY sequence of
+data deltas (append, append, full-change), the chunk-spliced incremental
+session produces *bit-identical* outputs to a cold full recompute in a
+fresh store — at every step. Alongside bit-identity the oracle checks
+the two accounting invariants:
+
+* chunk work == missing chunks: for every chunk-planned node (except
+  union, which never invokes its fn), ``chunk_computed[n]`` equals
+  exactly the number of its plan's chunk signatures absent from the
+  store before the run — on a pure append that is the appended chunks;
+* ledger == disk after every splice (fleet budget honesty).
+
+A seeded plain-numpy driver runs everywhere; hypothesis (a dev/CI-only
+dependency, see requirements-dev.txt) drives the same machinery over a
+wider random space when installed — ``--hypothesis-profile=ci-deep``
+(registered in conftest.py) deepens it for the nightly tier-2 job.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.config import EngineConfig, StoreConfig
+from repro.core.locking import StorageLedger
+from repro.core.omp import Policy
+from repro.core.session import IterativeSession
+from repro.core.signature import compute_chunk_signatures, compute_signatures
+from repro.core.workflow import Workflow
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# random-DAG generator: specs are plain data so the same spec list builds
+# the same workflow for the incremental and the cold session
+# ---------------------------------------------------------------------------
+def _chunk_value(desc):
+    seed, n = desc
+    return np.random.default_rng(seed).standard_normal(n)
+
+
+def make_specs(rng: np.random.Generator, n_ops: int) -> list[dict]:
+    """A random operator list over 1-2 chunked sources.
+
+    Each spec is ``{name, op, parents, a, b}``; ``op`` is one of
+    source/map/union/assoc_reduce/opaque. The generator tracks which
+    nodes are chunked (concat-mode) so unions only take chunked parents
+    and maps take one chunked parent plus (sometimes) one flat
+    broadcast parent — anything else would (correctly) just fail the
+    plan gates and fall back to opaque execution, which the oracle also
+    covers via explicit opaque ops.
+    """
+    n_src = int(rng.integers(1, 3))
+    specs = [{"name": f"src{i}", "op": "source", "parents": ()}
+             for i in range(n_src)]
+    chunked = [s["name"] for s in specs]
+    flat: list[str] = []
+    for i in range(n_ops):
+        name = f"n{i}"
+        a = float(rng.uniform(0.5, 2.0))
+        b = float(rng.uniform(-1.0, 1.0))
+        op = str(rng.choice(
+            ["map", "map", "union", "assoc_reduce", "opaque", "opaque"]))
+        if op == "union" and len(chunked) < 2:
+            op = "map"
+        if op == "map":
+            parents = [str(rng.choice(chunked))]
+            if flat and rng.random() < 0.4:
+                parents.append(str(rng.choice(flat)))
+            chunked.append(name)
+        elif op == "union":
+            parents = list(rng.choice(chunked, size=2, replace=False))
+            chunked.append(name)
+        elif op == "assoc_reduce":
+            parents = [str(rng.choice(chunked))]
+            flat.append(name)
+        else:  # opaque: any parents, output flat
+            pool = chunked + flat
+            parents = [str(p) for p in
+                       rng.choice(pool, size=min(2, len(pool)),
+                                  replace=False)]
+            flat.append(name)
+        specs.append({"name": name, "op": op, "parents": tuple(parents),
+                      "a": a, "b": b})
+    return specs
+
+
+def build_workflow(specs: list[dict],
+                   descs: dict[str, list[tuple]]) -> Workflow:
+    wf = Workflow("oracle")
+    refs: dict[str, object] = {}
+    for s in specs:
+        name, op = s["name"], s["op"]
+        if op == "source":
+            d = list(descs[name])
+            refs[name] = wf.source(
+                name, lambda d=d: [_chunk_value(x) for x in d], chunks=d)
+            continue
+        parents = [refs[p] for p in s["parents"]]
+        a, b = s["a"], s["b"]
+        if op == "map":
+            if len(parents) == 2:
+                fn = (lambda x, f, a=a, b=b:
+                      np.sin(a * x) + b + float(np.mean(f)))
+            else:
+                fn = lambda x, a=a, b=b: np.sin(a * x) + b
+            refs[name] = wf.extractor(name, fn, parents,
+                                      config=("m", a, b),
+                                      incremental="map")
+        elif op == "union":
+            refs[name] = wf.extractor(
+                name, lambda *vs: np.concatenate(vs, axis=0), parents,
+                config="u", incremental="union")
+        elif op == "assoc_reduce":
+            fn = ((lambda x: np.sum(x, axis=0)) if a < 1.25
+                  else (lambda x: np.max(x, axis=0)))
+            refs[name] = wf.reducer(name, fn, parents,
+                                    config=("r", a < 1.25),
+                                    incremental="assoc_reduce")
+        else:  # opaque: global state (mean over all rows) — not a map
+            refs[name] = wf.synthesizer(
+                name,
+                lambda *vs, a=a: np.asarray(
+                    [a * sum(float(np.sum(np.asarray(v))) for v in vs),
+                     sum(float(np.mean(np.asarray(v))) for v in vs)]),
+                parents, config=("o", a))
+    consumed = {p for s in specs for p in s["parents"]}
+    for s in specs:
+        if s["name"] not in consumed:
+            wf.output(refs[s["name"]])
+    return wf
+
+
+def _session(workdir: str) -> IterativeSession:
+    return IterativeSession(workdir,
+                            engine=EngineConfig(policy=Policy.ALWAYS),
+                            storage=StoreConfig(shared_budget=True))
+
+
+def _assert_bit_identical(a, b, ctx: str) -> None:
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype, f"{ctx}: dtype {a.dtype} != {b.dtype}"
+    assert a.shape == b.shape, f"{ctx}: shape {a.shape} != {b.shape}"
+    assert a.tobytes() == b.tobytes(), f"{ctx}: bytes differ"
+
+
+def run_oracle(tmp_path, seed: int, n_ops: int = 6,
+               deltas: tuple[str, ...] = ("append", "append",
+                                          "full-change")) -> None:
+    """One full differential run: build a random DAG, apply the delta
+    sequence, and at every step compare the incremental session to a
+    cold recompute while checking the chunk- and ledger-accounting
+    invariants."""
+    rng = np.random.default_rng(seed)
+    specs = make_specs(rng, n_ops)
+    sources = [s["name"] for s in specs if s["op"] == "source"]
+    base = {src: 1000 * (k + 1) + seed for k, src in enumerate(sources)}
+    descs = {src: [(base[src] + j, int(rng.integers(20, 60)))
+                   for j in range(int(rng.integers(2, 4)))]
+             for src in sources}
+
+    inc = _session(os.path.join(tmp_path, "inc"))
+    for step, delta in enumerate(("initial",) + tuple(deltas)):
+        if delta == "append":
+            src = str(rng.choice(sources))
+            descs[src] = descs[src] + [
+                (base[src] + 100 + step, int(rng.integers(20, 60)))]
+        elif delta == "full-change":
+            for src in sources:
+                descs[src] = [(s + 10_000, n) for s, n in descs[src]]
+
+        wf = build_workflow(specs, descs)
+        dag = wf.build()
+        sigs = compute_signatures(dag)
+        plans = compute_chunk_signatures(dag, sigs)
+        missing = {n: sum(1 for cs in p.chunk_sigs
+                          if not inc.store.has_local(cs))
+                   for n, p in plans.items()}
+
+        rep = inc.run(build_workflow(specs, descs))
+        cold = _session(os.path.join(tmp_path, f"cold{step}"))
+        cold_rep = cold.run(build_workflow(specs, descs))
+
+        assert rep.outputs.keys() == cold_rep.outputs.keys()
+        for out in rep.outputs:
+            _assert_bit_identical(rep.outputs[out], cold_rep.outputs[out],
+                                  f"seed={seed} step={step}({delta}) "
+                                  f"output={out}")
+        for n, p in plans.items():
+            if p.mode == "union":
+                continue  # concat never invokes fn
+            got = rep.execution.chunk_computed.get(n, 0)
+            assert got == missing[n], (
+                f"seed={seed} step={step}({delta}) node={n}: "
+                f"{got} chunks computed, {missing[n]} were missing")
+        assert StorageLedger(inc.store.ledger_path).used() == \
+            pytest.approx(float(inc.store.total_bytes())), \
+            f"seed={seed} step={step}({delta}): ledger != disk"
+
+
+# ---------------------------------------------------------------------------
+# seeded plain-numpy driver (runs everywhere, no hypothesis needed)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_differential_oracle_seeded(tmp_path, seed):
+    run_oracle(str(tmp_path), seed)
+
+
+def test_append_splices_exactly_the_delta(tmp_path):
+    """Deterministic map chain: an append recomputes exactly the appended
+    chunk at every chunked node and reuses every prefix chunk."""
+    def build(descs):
+        wf = Workflow("chain")
+        src = wf.source("src", lambda d=list(descs):
+                        [_chunk_value(x) for x in d], chunks=list(descs))
+        m1 = wf.extractor("m1", lambda x: 2.0 * x + 1.0, [src],
+                          config="m1", incremental="map")
+        m2 = wf.extractor("m2", lambda x: np.sin(x), [m1],
+                          config="m2", incremental="map")
+        red = wf.reducer("red", lambda x: np.sum(x, axis=0), [m2],
+                         config="red", incremental="assoc_reduce")
+        wf.output(m2)
+        wf.output(red)
+        return wf
+
+    sess = _session(str(tmp_path))
+    d0 = [(10, 40), (11, 40), (12, 40)]
+    r0 = sess.run(build(d0))
+    assert r0.execution.chunk_computed == {"src": 3, "m1": 3, "m2": 3,
+                                           "red": 3}
+    r1 = sess.run(build(d0 + [(13, 40)]))
+    assert r1.execution.chunk_computed == {"src": 1, "m1": 1, "m2": 1,
+                                           "red": 1}
+    assert r1.execution.chunk_reused == {"src": 3, "m1": 3, "m2": 3,
+                                         "red": 3}
+    cold = _session(os.path.join(str(tmp_path), "cold"))
+    rc = cold.run(build(d0 + [(13, 40)]))
+    for out in ("m2", "red"):
+        _assert_bit_identical(r1.outputs[out], rc.outputs[out], out)
+
+
+def test_full_change_recomputes_everything(tmp_path):
+    def build(descs):
+        wf = Workflow("chain")
+        src = wf.source("src", lambda d=list(descs):
+                        [_chunk_value(x) for x in d], chunks=list(descs))
+        m1 = wf.extractor("m1", lambda x: x * x, [src],
+                          config="m1", incremental="map")
+        wf.output(m1)
+        return wf
+
+    sess = _session(str(tmp_path))
+    sess.run(build([(1, 30), (2, 30)]))
+    r = sess.run(build([(7, 30), (8, 30)]))   # every chunk id changed
+    assert r.execution.chunk_computed == {"src": 2, "m1": 2}
+    assert r.execution.chunk_reused == {"src": 0, "m1": 0}
+
+
+def test_opaque_node_breaks_the_chunk_chain(tmp_path):
+    """An opaque (global-state) operator mid-chain falls back to whole
+    recompute — and a map downstream of it gets no plan either (its
+    parent is not chunked), yet results stay bit-identical."""
+    def build(descs):
+        wf = Workflow("mixed")
+        src = wf.source("src", lambda d=list(descs):
+                        [_chunk_value(x) for x in d], chunks=list(descs))
+        m1 = wf.extractor("m1", lambda x: x + 1.0, [src],
+                          config="m1", incremental="map")
+        stz = wf.extractor("stz", lambda x: (x - x.mean()) / (x.std()
+                                                              + 1e-9),
+                           [m1], config="stz")   # opaque: global state
+        m2 = wf.extractor("m2", lambda x: x * 3.0, [stz],
+                          config="m2", incremental="map")
+        wf.output(m2)
+        return wf
+
+    d = [(3, 25), (4, 25)]
+    sess = _session(str(tmp_path))
+    sess.run(build(d))
+    d2 = d + [(5, 25)]
+    r = sess.run(build(d2))
+    # m1 splices; stz and m2 are whole-value (no plan).
+    assert r.execution.chunk_computed.get("m1") == 1
+    assert "stz" not in r.execution.chunk_computed
+    assert "m2" not in r.execution.chunk_computed
+    cold = _session(os.path.join(str(tmp_path), "cold"))
+    rc = cold.run(build(d2))
+    _assert_bit_identical(r.outputs["m2"], rc.outputs["m2"], "m2")
+
+
+def test_union_concatenates_parent_manifests(tmp_path):
+    def build(da, db):
+        wf = Workflow("u")
+        a = wf.source("a", lambda d=list(da): [_chunk_value(x) for x in d],
+                      chunks=list(da))
+        b = wf.source("b", lambda d=list(db): [_chunk_value(x) for x in d],
+                      chunks=list(db))
+        u = wf.extractor("u", lambda *vs: np.concatenate(vs, axis=0),
+                         [a, b], config="u", incremental="union")
+        m = wf.extractor("m", lambda x: x - 1.0, [u],
+                         config="m", incremental="map")
+        wf.output(m)
+        return wf
+
+    da, db = [(1, 10), (2, 10)], [(9, 15)]
+    sess = _session(str(tmp_path))
+    r0 = sess.run(build(da, db))
+    assert r0.execution.chunk_computed["m"] == 3   # 2 + 1 chunks
+    r1 = sess.run(build(da, db + [(10, 15)]))      # append to b only
+    assert r1.execution.chunk_computed["m"] == 1
+    assert r1.execution.chunk_reused["m"] == 3
+    cold = _session(os.path.join(str(tmp_path), "cold"))
+    rc = cold.run(build(da, db + [(10, 15)]))
+    _assert_bit_identical(r1.outputs["m"], rc.outputs["m"], "m")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven deep variant (dev/CI only; profile ci-deep in nightly)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(seed=st.integers(0, 2 ** 16),
+           n_ops=st.integers(3, 9),
+           deltas=st.lists(st.sampled_from(["append", "full-change"]),
+                           min_size=1, max_size=3))
+    def test_differential_oracle_hypothesis(tmp_path_factory, seed, n_ops,
+                                            deltas):
+        tmp = tmp_path_factory.mktemp(f"oracle-{seed}-{n_ops}")
+        run_oracle(str(tmp), seed, n_ops=n_ops, deltas=tuple(deltas))

@@ -1,0 +1,161 @@
+"""Pruning (§5.4) and the §6.6 stale purge's selection rules.
+
+``stale_variants`` is the purge's brain, extracted so its suppression
+rules are unit-testable without a store: never the node's own current
+signature, and only names that are *original* this iteration (sibling
+sweep variants and still-equivalent past runs are untouched). The
+end-to-end tests pin the interaction the chunked materializations
+introduce: purging a stale pre-append manifest must not cascade away the
+prefix chunks the imminent delta splice reuses (``keep_chunks``).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import IterativeSession, compute_signatures
+from repro.core.config import EngineConfig, StoreConfig
+from repro.core.locking import StorageLedger
+from repro.core.omp import Policy
+from repro.core.pruning import (slice_from_outputs, stale_variants,
+                                zero_weight_extractors)
+from repro.core.workflow import Workflow
+
+
+# -- slicing -----------------------------------------------------------------
+
+def test_slice_drops_non_ancestors_of_outputs():
+    wf = Workflow("slice")
+    src = wf.source("src", lambda: np.arange(4.0), config="v1")
+    used = wf.extractor("used", lambda x: x + 1, [src], config="v1")
+    wf.extractor("raceExt", lambda x: x * 2, [src], config="v1")  # unused
+    wf.output(used)
+    keep = slice_from_outputs(wf.build())
+    assert keep == {"src", "used"}
+
+
+# -- data-driven pruning -----------------------------------------------------
+
+def test_zero_weight_extractors_by_provenance():
+    w = np.array([0.0, 0.5, 1e-12, 0.0])
+    prov = {"a": [0, 2], "b": [1], "c": [3], "empty": []}
+    assert zero_weight_extractors(w, prov) == {"a", "c"}
+    assert zero_weight_extractors(w, prov, tol=1.0) == {"a", "b", "c"}
+
+
+# -- stale_variants suppression rules ----------------------------------------
+
+def test_stale_variants_never_selects_current_signature():
+    by_name = {"n": ["sig-old", "sig-cur"], "m": ["sig-m"]}
+    out = stale_variants(by_name, {"n", "m"},
+                         {"n": "sig-cur", "m": "sig-m"})
+    assert out == ["sig-old"]
+
+
+def test_stale_variants_only_touches_original_names():
+    by_name = {"n": ["old-n"], "m": ["old-m"]}
+    # "m" is not original this iteration — its stored variant may belong
+    # to a sibling sweep session and must be left alone.
+    out = stale_variants(by_name, {"n"}, {"n": "cur-n", "m": "cur-m"})
+    assert out == ["old-n"]
+
+
+def test_stale_variants_deterministic_order():
+    by_name = {"b": ["b1", "b2"], "a": ["a1"]}
+    sigs = {"a": "a-cur", "b": "b-cur"}
+    assert stale_variants(by_name, {"a", "b"}, sigs) == ["a1", "b1", "b2"]
+
+
+# -- §6.6 purge end-to-end, with and without chunked manifests ---------------
+
+def _session(path: str) -> IterativeSession:
+    return IterativeSession(path,
+                            engine=EngineConfig(policy=Policy.ALWAYS),
+                            storage=StoreConfig(shared_budget=True))
+
+
+def _chunk(desc):
+    seed, n = desc
+    return np.random.default_rng(seed).standard_normal(n)
+
+
+def _chunked_wf(descs):
+    wf = Workflow("purge")
+    src = wf.source("src", lambda d=list(descs): [_chunk(x) for x in d],
+                    chunks=list(descs))
+    m = wf.extractor("m", lambda x: np.tanh(x), [src],
+                     config="m", incremental="map")
+    wf.output(m)
+    return wf
+
+
+def test_purge_removes_stale_variant_and_credits_bytes(tmp_path):
+    def build(version):
+        wf = Workflow("purge")
+        src = wf.source("src",
+                        lambda v=version: np.arange(64.0) * len(v),
+                        config=version)
+        wf.output(src)
+        return wf
+
+    sess = _session(str(tmp_path))
+    sess.run(build("v1"))
+    old_sig = compute_signatures(build("v1").build())["src"]
+    assert sess.store.has_local(old_sig)
+    rep = sess.run(build("v2"))
+    assert rep.purged_bytes > 0
+    assert not sess.store.has_local(old_sig)   # stale variant gone
+    assert StorageLedger(sess.store.ledger_path).used() \
+        == pytest.approx(float(sess.store.total_bytes()))
+
+
+def test_delta_purge_keeps_still_valid_sibling_chunks(tmp_path):
+    """An append makes the pre-append manifest a stale variant of "src"
+    and "m"; the purge deletes those manifests *before* execution — but
+    the prefix chunks they reference are exactly what the delta splice
+    is about to reuse, so keep_chunks must spare them. If the cascade
+    took them, every chunk would recompute and chunk_reused would be 0."""
+    d0 = [(1, 30), (2, 30), (3, 30)]
+    sess = _session(str(tmp_path))
+    sess.run(_chunked_wf(d0))
+    old_sigs = compute_signatures(_chunked_wf(d0).build())
+
+    d1 = d0 + [(4, 30)]
+    rep = sess.run(_chunked_wf(d1))
+    # Stale pre-append manifests were purged — but freed 0 bytes: every
+    # byte of a concat manifest lives in its chunks, and these chunks
+    # are exactly the protected prefix of the imminent splice.
+    for n in ("src", "m"):
+        assert not sess.store.has_local(old_sigs[n])
+    assert rep.purged_bytes == 0
+    # … but their prefix chunks survived and were spliced, not recomputed.
+    assert rep.execution.chunk_reused == {"src": 3, "m": 3}
+    assert rep.execution.chunk_computed == {"src": 1, "m": 1}
+    # Accounting stayed honest through purge + cascade + splice.
+    assert StorageLedger(sess.store.ledger_path).used() \
+        == pytest.approx(float(sess.store.total_bytes()))
+    # No dangling references either direction: every referenced chunk
+    # exists, every chunk entry is referenced (nothing for the GC).
+    assert sess.store.gc_orphan_chunks(min_age_seconds=0.0) == (0, 0)
+
+
+def test_sweep_mode_does_not_purge_sibling_variants(tmp_path):
+    """purge_stale=False (sweep mode): a same-name different-config
+    variant stays materialized — sibling sessions own it."""
+    sess = IterativeSession(str(tmp_path),
+                            engine=EngineConfig(policy=Policy.ALWAYS),
+                            storage=StoreConfig(shared_budget=True,
+                                                purge_stale=False))
+
+    def build(version):
+        wf = Workflow("sweep")
+        src = wf.source("src", lambda v=version: np.arange(16.0),
+                        config=version)
+        wf.output(src)
+        return wf
+
+    sess.run(build("v1"))
+    v1_sig = compute_signatures(build("v1").build())["src"]
+    rep = sess.run(build("v2"))
+    assert rep.purged_bytes == 0
+    assert sess.store.has_local(v1_sig)

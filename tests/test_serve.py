@@ -205,16 +205,27 @@ def test_concurrent_clients_bit_identical_to_isolated(tmp_path):
 # ---------------------------------------------------------------------------
 def test_shared_pool_floor_and_bound():
     """Every session always gets its inline worker (progress floor);
-    borrowed workers never exceed the pool size."""
+    borrowed workers never exceed the pool size.
+
+    Event-synchronized, not sleep-synchronized: every worker holds its
+    slot until all three sessions' *inline* workers are live (the inline
+    worker runs in the session's own thread, so three live inline
+    workers prove all three ``run`` calls decided their width while no
+    slot had been returned). The ``sum(widths)`` bound therefore cannot
+    flake on a slow runner where sleeping sessions would serialize."""
     pool = SharedWorkerPool(2)
     lock = threading.Lock()
-    live, peak = [0], [0]
+    live, peak, inline_live = [0], [0], [0]
+    release = threading.Event()
+    session_threads: set = set()
 
     def worker():
         with lock:
             live[0] += 1
             peak[0] = max(peak[0], live[0])
-        time.sleep(0.05)
+            if threading.current_thread() in session_threads:
+                inline_live[0] += 1
+        release.wait(timeout=60.0)
         with lock:
             live[0] -= 1
 
@@ -224,10 +235,19 @@ def test_shared_pool_floor_and_bound():
         widths.append(pool.run(worker, want=4))
 
     threads = [threading.Thread(target=one_session) for _ in range(3)]
+    session_threads.update(threads)
     for t in threads:
         t.start()
+    deadline = time.monotonic() + 60.0
+    while time.monotonic() < deadline:
+        with lock:
+            if inline_live[0] == 3:
+                break
+        time.sleep(0.001)
+    release.set()
     for t in threads:
         t.join()
+    assert inline_live[0] == 3           # progress floor held everywhere
     assert len(widths) == 3 and all(w >= 1 for w in widths)
     assert sum(widths) <= 3 + 2          # 3 inline + at most 2 borrowed
     assert peak[0] <= 3 + 2
@@ -374,7 +394,6 @@ def test_client_shutdown_stops_server(tmp_path):
     assert client.wait(job_id)["status"] == "done"
     assert client.shutdown()["stopping"]
     client.close()
-    deadline = time.monotonic() + 30.0
-    while not server._shutdown_started and time.monotonic() < deadline:
-        time.sleep(0.01)
-    assert server._shutdown_started
+    with server._cv:
+        assert server._cv.wait_for(lambda: server._shutdown_started,
+                                   timeout=30.0)
