@@ -40,11 +40,19 @@ Prints ``name,us_per_call,derived`` CSV rows:
       chunked census source: a 10 % append's spliced delta iteration
       must land under 0.5x the cold full retrain, bit-identically
       (writes results/bench/incremental.csv).
+  bench_tier                — ISSUE 9: the store's memory tier on the LM
+      training workflow: a warm same-process rerun must serve ≥90 % of
+      reused bytes from host RAM with zero ``.npy`` leaf reads on the
+      hit path, bit-identically to the cold run; a memory hit must load
+      ≥5x faster than a disk reload of the same signature; per-tier
+      ledgers must equal bytes held after the runs.
 
 Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list),
 HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine),
 HELIX_BENCH_SWEEP_VARIANTS (sweep arms, default 4), HELIX_BENCH_SWEEP_SCALE
-(input-size scale for the sweep bench, default 1 — CI smoke uses ~0.05).
+(input-size scale for the sweep bench, default 1 — CI smoke uses ~0.05),
+HELIX_BENCH_LM_STEPS / HELIX_BENCH_LM_DM (bench_tier LM train steps and
+d_model, defaults 4 / 128).
 """
 from __future__ import annotations
 
@@ -743,6 +751,107 @@ def bench_incremental() -> None:
         f"delta retrain {delta_s:.2f}s not under 0.5x cold {cold_s:.2f}s")
 
 
+def bench_tier() -> None:
+    """ISSUE 9: memory-tier acceptance on the LM training workflow.
+
+    One session, one store, two runs of the identical LM workflow:
+
+    1. **Cold** — trains the small transformer and materializes every
+       node (Policy.ALWAYS); the store's write-through memory tier
+       admits each durable value on the way to disk.
+    2. **Warm (same process)** — reruns the same workflow: every reuse
+       is a signature hit that the memory tier must serve zero-copy.
+
+    Asserted, not just reported: the warm run is bit-identical to the
+    cold run; ≥90 % of its reused bytes come from the memory tier; the
+    warm run's hit path reads **zero** ``.npy`` leaf files; a timed
+    memory hit on the largest signature beats a fresh-process disk
+    reload of the same signature by ≥5x; and after both runs each
+    tier's ledger equals the bytes it actually holds (shared ledger ==
+    disk, memory accounting == a recount of resident entries).
+    """
+    from repro.core import Store, StorageLedger
+    from repro.core.config import StoreConfig
+
+    steps = int(os.environ.get("HELIX_BENCH_LM_STEPS", "4"))
+    d_model = int(os.environ.get("HELIX_BENCH_LM_DM", "128"))
+    k = dataclasses.replace(W.LMKnobs(), steps=steps, d_model=d_model)
+
+    workdir = os.path.join(ROOT, "lm_tier")
+    shutil.rmtree(workdir, ignore_errors=True)
+    sess = IterativeSession(
+        workdir, policy=Policy.ALWAYS,
+        storage=StoreConfig(budget_bytes=float(BUDGET),
+                            shared_budget=True,   # arms the ledger check
+                            mem_budget_bytes=256e6))
+    store = sess.store
+
+    t0 = time.perf_counter()
+    rep_cold = sess.run(W.build_lm(k))
+    cold_s = time.perf_counter() - t0
+
+    # Snapshot the counters the warm run must (not) move.
+    def stats_snap():
+        return {t: dict(s) for t, s in store.load_stats.items()}
+
+    before = stats_snap()
+    npy_before = store.npy_leaf_reads
+    t0 = time.perf_counter()
+    rep_warm = sess.run(W.build_lm(k))
+    warm_s = time.perf_counter() - t0
+    after = stats_snap()
+    npy_delta = store.npy_leaf_reads - npy_before
+
+    assert rep_warm.outputs["evalLoss"] == rep_cold.outputs["evalLoss"], \
+        "warm memory-served rerun diverged from the cold run"
+
+    mem_bytes = after["memory"]["bytes"] - before["memory"]["bytes"]
+    disk_bytes = after["local"]["bytes"] - before["local"]["bytes"]
+    reused = mem_bytes + disk_bytes
+    mem_frac = mem_bytes / max(reused, 1)
+    assert reused > 0, "warm rerun reused nothing — no signature hits"
+    assert mem_frac >= 0.9, (
+        f"memory tier served only {mem_frac:.0%} of reused bytes "
+        f"({mem_bytes}B mem vs {disk_bytes}B disk)")
+    assert npy_delta == 0, (
+        f"warm hit path read {npy_delta} .npy leaf files (must be 0)")
+
+    # Timed hit-vs-reload on the largest materialization (the TrainState).
+    store.writer_drain()
+    big_sig = max(store.entries().items(),
+                  key=lambda kv: kv[1].get("nbytes", 0))[0]
+    mem_us = min(_timed_load(store, big_sig) for _ in range(5))
+    cold_store = Store(store.root, mem_budget_bytes=0.0)
+    disk_us = min(_timed_load(cold_store, big_sig) for _ in range(5))
+    ratio = disk_us / max(mem_us, 1e-9)
+    assert ratio >= 5.0, (
+        f"memory hit ({mem_us:.0f}us) only {ratio:.1f}x faster than disk "
+        f"reload ({disk_us:.0f}us); need >=5x")
+
+    # Per-tier ledger == bytes held.
+    ledger_drift = StorageLedger(store.ledger_path).used() \
+        - store.total_bytes()
+    tiers = store.tier_status()
+    mem_drift = tiers["memory"]["bytes"] - store._mem.recount()
+    assert ledger_drift == 0, f"shared ledger drift: {ledger_drift}B"
+    assert mem_drift == 0, f"memory-tier accounting drift: {mem_drift}B"
+
+    print(f"lm_tier_warm,{warm_s * 1e6:.0f},"
+          f"cold_s={cold_s:.2f};warm_s={warm_s:.2f};"
+          f"mem_frac={mem_frac:.2f};npy_reads={npy_delta};"
+          f"mem_hit_us={mem_us:.0f};disk_load_us={disk_us:.0f};"
+          f"hit_speedup={ratio:.1f}x;"
+          f"mem_hits={after['memory']['hits'] - before['memory']['hits']};"
+          f"ledger_drift_b={ledger_drift};mem_drift_b={mem_drift}",
+          flush=True)
+
+
+def _timed_load(store, sig: str) -> float:
+    t0 = time.perf_counter()
+    store.load(sig)
+    return (time.perf_counter() - t0) * 1e6
+
+
 def bench_engine_overlap() -> None:
     """Scheduler-overlap ceiling: a wide diamond of GIL-releasing 150 ms
     wait stubs (no CPU contention). Near-width× speedup means the ready-set
@@ -791,6 +900,7 @@ def main() -> None:
     bench_remote_reuse()
     bench_search_reuse()
     bench_incremental()
+    bench_tier()
     bench_engine_overlap()
 
 

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 
 from repro.core import Workflow
 from repro.data import synth, tabular
+from repro.models.config import ArchConfig
+from repro.train import steps as train_steps
 
 
 # ---------------------------------------------------------------------------
@@ -595,6 +597,108 @@ def mutate_mnist(k: MNISTKnobs, kind: str, rng) -> MNISTKnobs:
 
 
 # ---------------------------------------------------------------------------
+# 5. LM training (small transformer; large pytree materializations)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LMKnobs:
+    """A small-config LM training loop on the model zoo's dense family.
+
+    Unlike the four survey workflows, the expensive reusable artifacts
+    here are *pytrees of jax arrays* (a TrainState of params + AdamW
+    moments), which is what the store's memory tier exists to serve
+    zero-copy: a warm rerun should replay the trained state from host
+    RAM without touching a single ``.npy``."""
+
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    vocab: int = 512
+    seq_len: int = 64
+    batch: int = 8
+    steps: int = 4                # train batches (halving resource, LI)
+    peak_lr: float = 1e-3
+    seed: int = 0
+    report_percentiles: bool = False   # PPR knob (loss-report formatting)
+
+
+def _lm_arch(k: LMKnobs) -> ArchConfig:
+    # attn_impl="chunked" — pure-jnp attention; the Pallas flash kernel
+    # needs a TPU and this workflow must run on the CI's CPU.
+    return ArchConfig(
+        name="bench-lm", family="dense", num_layers=k.n_layers,
+        d_model=k.d_model, num_heads=k.n_heads, num_kv_heads=k.n_heads,
+        d_ff=k.d_ff, vocab_size=k.vocab, attn_impl="chunked")
+
+
+def build_lm(k: LMKnobs) -> Workflow:
+    cfg = _lm_arch(k)
+    wf = Workflow("lm")
+
+    def make_tokens():
+        rng = np.random.default_rng(k.seed + 101)
+        # steps train batches + 1 held-out eval batch
+        return rng.integers(0, k.vocab, (k.steps + 1, k.batch, k.seq_len),
+                            dtype=np.int32)
+
+    tokens = wf.source("tokens", make_tokens,
+                       config=("tok", k.vocab, k.seq_len, k.batch, k.steps,
+                               k.seed))
+    state0 = wf.source(
+        "initState",
+        lambda: train_steps.init_train_state(cfg, jax.random.PRNGKey(k.seed)),
+        config=("init", k.n_layers, k.d_model, k.n_heads, k.d_ff, k.vocab,
+                k.seed))
+
+    def train(tok, state):
+        step = jax.jit(lambda s, b: train_steps.train_step(
+            cfg, s, b, peak_lr=k.peak_lr, warmup_steps=2,
+            total_steps=max(k.steps, 3), clip_norm=1.0))
+        losses = []
+        for i in range(k.steps):
+            state, metrics = step(state, {"tokens": jnp.asarray(tok[i])})
+            losses.append(float(metrics["loss"]))
+        return {"state": state, "losses": np.asarray(losses, np.float64)}
+
+    trained = wf.learner(
+        "train", train, [tokens, state0],
+        config=("train", k.n_layers, k.d_model, k.n_heads, k.d_ff, k.vocab,
+                k.seq_len, k.batch, k.steps, k.peak_lr))
+
+    def eval_loss(tok, tr):
+        loss, _ = train_steps.loss_fn(
+            cfg, tr["state"].params, {"tokens": jnp.asarray(tok[-1])})
+        out = {"eval_loss": float(loss),
+               "train_losses": tr["losses"].tolist()}
+        if k.report_percentiles:
+            qs = np.percentile(tr["losses"], [0, 50, 100])
+            out["loss_percentiles"] = {"p0": float(qs[0]),
+                                       "p50": float(qs[1]),
+                                       "p100": float(qs[2])}
+        return out
+
+    out = wf.reducer("evalLoss", eval_loss, [tokens, trained],
+                     config=("eval", k.report_percentiles))
+    wf.output(out)
+    return wf
+
+
+def mutate_lm(k: LMKnobs, kind: str, rng) -> LMKnobs:
+    if kind == "DPR":
+        if rng.random() < 0.5:
+            return dataclasses.replace(k, seq_len=int(rng.choice(
+                [48, 64, 96])))
+        return dataclasses.replace(k, batch=int(rng.choice([4, 8])))
+    if kind == "LI":
+        if rng.random() < 0.5:
+            return dataclasses.replace(k, peak_lr=float(rng.choice(
+                [3e-4, 1e-3, 3e-3])))
+        return dataclasses.replace(k, steps=int(rng.choice([3, 4, 6])))
+    return dataclasses.replace(
+        k, report_percentiles=not k.report_percentiles)
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -617,6 +721,8 @@ WORKFLOWS = {
                        {"DPR": 1.0, "LI": 0.0, "PPR": 0.0}),
     "mnist": WorkflowDef("mnist", MNISTKnobs(), build_mnist, mutate_mnist,
                          {"DPR": 0.3, "LI": 0.4, "PPR": 0.3}),
+    "lm": WorkflowDef("lm", LMKnobs(), build_lm, mutate_lm,
+                      {"DPR": 0.3, "LI": 0.5, "PPR": 0.2}),
 }
 
 

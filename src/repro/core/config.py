@@ -116,6 +116,14 @@ class StoreConfig:
     ``gc_interval`` / ``gc_min_age``
         Remote-tier orphan GC cadence and safety age gate
         (``gc_interval=None`` = 900 s when a remote is attached).
+    ``mem_budget_bytes``
+        Host-RAM budget for the store's memory tier (memtier.py): a
+        bounded process-local cache of materialized values served
+        zero-copy in front of the disk tier. 0 disables the tier.
+    ``mem_writeback``
+        Write-back mode: saves land memory-only and spill to disk at
+        demotion (`mem_flush` is the durability barrier). Off by
+        default — write-through keeps every value crash-durable.
     """
 
     budget_bytes: float = float("inf")
@@ -125,6 +133,8 @@ class StoreConfig:
     purge_stale: bool | None = None
     gc_interval: float | None = None
     gc_min_age: float = 3600.0
+    mem_budget_bytes: float = 256e6
+    mem_writeback: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -159,3 +159,55 @@ class CostModel:
         concurrent ``save()``'s dict swap."""
         with self._lock:
             return {sig: float(v) for sig, v in self.reuse.items()}
+
+
+class TierBandwidth:
+    """Per-tier EWMA load bandwidths over one store's ``.fleet/bw.json``.
+
+    The paper's ``l_i`` was a single per-store number; with the TierStack
+    (memory → disk → remote) each tier gets its own measured bandwidth
+    and fixed per-access latency floor, so OMP's ``(1+1/h)·l_i < C(n_i)``
+    rule can price the *cheapest reachable tier* of a signature rather
+    than assuming every hit pays a disk read.
+
+    Wraps the store's existing :class:`~repro.core.locking.SharedEwma`
+    (fleet merge-on-flush). The disk tier keeps the legacy ``read`` /
+    ``write`` keys — old ``bw.json`` files stay valid and the no-``sig``
+    estimate is numerically identical to the pre-tier formula
+    (``nbytes / (read|write|500e6) + 1e-4``). Memory and remote add
+    ``mem_*`` / ``remote_*`` keys beside them in the same file.
+
+    Floors are deliberately conservative static priors, not tuning
+    knobs: ~8 GB/s for a host-RAM pointer handoff (the measured EWMA
+    takes over after the first hit), 500 MB/s local disk (the historical
+    default), 100 MB/s + 1 ms for an object store round-trip.
+    """
+
+    _KEYS = {"memory": ("mem_read", "mem_write"),
+             "local": ("read", "write"),
+             "remote": ("remote_read", "remote_write")}
+    _FLOOR_BW = {"memory": 8e9, "local": 500e6, "remote": 100e6}
+    _LATENCY = {"memory": 1e-6, "local": 1e-4, "remote": 1e-3}
+
+    def __init__(self, ewma):
+        self._ewma = ewma
+
+    def observe(self, tier: str, kind: str, nbytes: float,
+                seconds: float) -> None:
+        """Record one measured transfer (``kind`` is "read"/"write")."""
+        if nbytes <= 0 or seconds <= 0:
+            return
+        rk, wk = self._KEYS[tier]
+        self._ewma.update(rk if kind == "read" else wk,
+                          float(nbytes) / float(seconds))
+
+    def bandwidth(self, tier: str) -> float:
+        """Best available bytes/s estimate for ``tier``: measured reads,
+        else measured writes, else the tier's static floor."""
+        rk, wk = self._KEYS[tier]
+        bw = self._ewma.get(rk) or self._ewma.get(wk)
+        return float(bw) if bw else self._FLOOR_BW[tier]
+
+    def est_load_seconds(self, tier: str, nbytes: float) -> float:
+        """Estimated seconds to serve ``nbytes`` from ``tier``."""
+        return float(nbytes) / self.bandwidth(tier) + self._LATENCY[tier]

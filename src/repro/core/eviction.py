@@ -62,6 +62,45 @@ def benefit_density(compute_s: float, load_s: float,
         * (1.0 + max(float(expected_uses), 0.0))
 
 
+def ranked_mem(entries: dict[str, dict],
+               est_disk_load: Callable[[float], float]) -> list[str]:
+    """Rank memory-tier entries cheapest-to-demote first.
+
+    The per-tier analog of :meth:`Evictor.ranked`, sharing
+    :func:`benefit_density` so the memory tier's demote-vs-keep and the
+    disk tier's evict-vs-admit can never use different value scales.
+    Demotion — not deletion — is the action being priced:
+
+    * A **clean** entry (a committed disk copy exists, or the writer
+      queue owns one in flight) demotes by dropping the RAM reference;
+      losing it costs one disk reload, so ``cost_s = l_disk`` and its
+      density reduces to ``1 + loads`` — pure observed-reuse ranking.
+    * A **dirty** entry (memory-only, write-back mode) must be spilled
+      before it can be dropped, and until the spill lands losing it
+      costs a full recompute: ``cost_s = max(C(n), l_disk)``.
+
+    ``entries`` maps sig → ``{nbytes, loads, last_load, created, dirty,
+    compute_s}``; ``est_disk_load`` prices the next tier down. Returns
+    signatures ascending by density, ties broken least-recently-used
+    (then oldest) — identical tie-breaking to the disk evictor.
+    """
+    scored = []
+    for sig, e in entries.items():
+        l_disk = max(float(est_disk_load(float(e.get("nbytes", 0) or 1))),
+                     1e-9)
+        if e.get("dirty"):
+            cost_s = max(float(e.get("compute_s", 0.0) or 0.0), l_disk)
+        else:
+            cost_s = l_disk
+        density = benefit_density(cost_s, l_disk,
+                                  float(e.get("loads", 0) or 0))
+        scored.append((density,
+                       e.get("last_load") or e.get("created", 0.0),
+                       sig))
+    scored.sort()
+    return [sig for _, _, sig in scored]
+
+
 @dataclasses.dataclass
 class EvictionStats:
     """Counters for one evictor's lifetime (fleet-wide when shared)."""

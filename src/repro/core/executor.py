@@ -461,6 +461,9 @@ class _Scheduler:
             return
         n_waiting = lease.waiters()
         est_bytes = tree_nbytes(value)
+        # Write decisions price the durable (disk) tier: the value is not
+        # resident on any tier yet, and the waiters this persist serves
+        # will read it from disk/remote, not this process's memory tier.
         est_load = self.store.est_load_seconds(est_bytes)
         if (sig not in self.share_sigs and n_waiting == 0
                 and est_load >= compute_seconds):
@@ -592,6 +595,11 @@ class _Scheduler:
             self.skipped[name] = "already materialized"
         else:
             est_bytes = tree_nbytes(value)
+            # Durable-tier price on purpose (no sig): Algorithm 2 is
+            # deciding whether a *future* load beats a recompute, and
+            # the future loader pays the disk tier — the memory tier's
+            # zero-copy hit is a same-process bonus on top, not the
+            # cost this write must amortize.
             est_load = self.store.est_load_seconds(est_bytes)
             # evict_inline=False: this runs under the scheduler lock, and
             # eviction is store I/O (index scan + deletes) that every

@@ -29,6 +29,15 @@ listed on that parameter's docstring); the heartbeat loop additionally
 asks :meth:`FaultPlan.drop_heartbeat` before each renewal. Production
 runs pass ``faults=None`` and pay a single ``is None`` check.
 
+:class:`~repro.core.store.Store` consults a plan assigned to its
+``faults`` attribute at the crash points of its multi-step local-disk
+protocols: the chunked-splice publish path
+(``splice:chunk_published``, ``splice:before_manifest``) and the
+memory tier's demotion path (``memtier:before_spill`` dies before any
+durable byte exists — a torn spill must be invisible after restart;
+``memtier:after_spill`` dies with the disk entry committed and the
+ledger already adjusted).
+
 Error classes: ``error="transient"`` injects
 :class:`~repro.core.remote.TransientBackendError` (retried with backoff
 by the remote tier), ``error="permanent"`` injects a plain

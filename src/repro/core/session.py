@@ -221,7 +221,9 @@ class IterativeSession:
                            sto.remote,
                            max_retries=res.remote_max_retries,
                            retry_backoff=res.remote_retry_backoff,
-                           faults=res.faults))
+                           faults=res.faults),
+                       mem_budget_bytes=sto.mem_budget_bytes,
+                       mem_writeback=sto.mem_writeback)
         self.cost_model = cost_model if cost_model is not None \
             else CostModel(os.path.join(workdir, "costs.json"))
         ledger = None
@@ -319,7 +321,10 @@ class IterativeSession:
                 # load cost that matters is manifest + referenced chunks.
                 nb = (meta["nbytes"]
                       + meta.get("chunked", {}).get("chunk_bytes", 0))
-                load_cost[n] = self.store.est_load_seconds(nb)
+                # Per-tier l_i: a memory-resident value prices at RAM
+                # bandwidth, a remote-only one at fetch bandwidth — the
+                # cheapest tier that can actually serve the signature.
+                load_cost[n] = self.store.est_load_seconds(nb, sig=sigs[n])
             else:
                 load_cost[n] = None
 

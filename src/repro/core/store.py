@@ -79,6 +79,22 @@ in one process or independent OS processes:
   that appeared on or left the disk, so ledger == disk is preserved.
   Chunked entries are local-tier only (manifests and chunks are not
   uploaded to the remote tier).
+* **TierStack** (memory → disk → remote): with ``mem_budget_bytes`` a
+  bounded host-RAM tier (memtier.py) sits in front of the disk tier
+  behind the same signature-keyed API. Every publish write-through
+  admits its host snapshot; every disk/remote load read-through
+  promotes its value; a same-process reload is then a zero-copy pytree
+  handoff — no ``.npy`` read, no unpickle (sharded loads re-place
+  leaves with ``jax.device_put`` and offload device arrays to host
+  asynchronously on the writer queue). The memory budget is enforced by
+  *demote-not-delete* eviction ranked by ``eviction.ranked_mem``; with
+  ``mem_writeback=True`` saves land memory-only (``SaveInfo.nbytes`` is
+  0 until demotion spills them to disk through the
+  ``memtier:before_spill`` / ``memtier:after_spill`` crash points, at
+  which point the bytes are ledger-adjusted in). ``est_load_seconds``
+  prices the cheapest tier that can serve a signature via per-tier EWMA
+  bandwidths (``costs.TierBandwidth`` over the same ``.fleet/bw.json``)
+  and ``tier_status`` reports one unified per-tier record.
 """
 from __future__ import annotations
 
@@ -100,8 +116,10 @@ import numpy as np
 import jax
 
 from .chunks import Chunked
+from .costs import TierBandwidth
 from .locking import (FileLock, SharedEwma, StorageLedger, read_json,
                       update_json)
+from .memtier import MemEntry, MemTier
 from .remote import RemoteStore
 
 
@@ -271,13 +289,19 @@ class Store:
 
     def __init__(self, root: str, max_inflight_bytes: int = 1 << 30,
                  heal: bool | None = None,
-                 remote: RemoteStore | None = None):
+                 remote: RemoteStore | None = None,
+                 mem_budget_bytes: float = 0.0,
+                 mem_writeback: bool = False):
         """``heal`` controls the open-time crash recovery (stale-staging
         reap, fleet-metadata reap, index rebuild from a directory scan):
         None (default) runs it on the first open of this root in this
         process only; True forces it; False skips it. ``remote`` attaches
         a fleet-shared :class:`~repro.core.remote.RemoteStore` tier the
-        local store write-through/read-through caches (see remote.py)."""
+        local store write-through/read-through caches (see remote.py).
+        ``mem_budget_bytes`` > 0 attaches the memory tier (memtier.py):
+        a bounded process-local host-RAM cache of materialized values in
+        front of the disk tier; ``mem_writeback`` makes saves land
+        memory-only until demotion spills them (write-back mode)."""
         self.root = root
         self.remote = remote
         os.makedirs(root, exist_ok=True)
@@ -305,9 +329,37 @@ class Store:
         self.remote_hits = 0
         # Optional fault-injection plan (faults.FaultPlan): consulted at
         # the named crash points of the chunked-splice publish path
-        # (``splice:chunk_published``, ``splice:before_manifest``).
-        # Production runs leave it None and pay one ``is None`` check.
+        # (``splice:chunk_published``, ``splice:before_manifest``) and
+        # the memory tier's demotion path (``memtier:before_spill``,
+        # ``memtier:after_spill``). Production runs leave it None and
+        # pay one ``is None`` check.
         self.faults = None
+        # Per-tier EWMA bandwidths over the shared bw.json (the disk
+        # tier keeps the legacy read/write keys, so old files stay
+        # valid and no-sig estimates are numerically unchanged).
+        self._tier_bw = TierBandwidth(self._bw)
+        # Per-tier load accounting + the .npy leaf-read counter the
+        # zero-serialization-on-hit guarantee is asserted against.
+        self.load_stats = {
+            "memory": {"hits": 0, "misses": 0, "bytes": 0},
+            "local": {"hits": 0, "misses": 0, "bytes": 0},
+            "remote": {"hits": 0, "misses": 0, "bytes": 0},
+        }
+        self.npy_leaf_reads = 0
+        # Signatures whose disk write the writer thread currently owns
+        # (popped from the queue, save not yet landed): a memory-tier
+        # spill of such a signature may drop instead of double-saving.
+        self._writer_active: set[str] = set()
+        # Memory tier (TierStack head). 0 budget = no tier: every
+        # existing direct-Store caller keeps the two-tier behavior.
+        self._mem: MemTier | None = None
+        if mem_budget_bytes and mem_budget_bytes > 0:
+            self._mem = MemTier(
+                mem_budget_bytes, writeback=mem_writeback,
+                spill=self._spill_from_mem,
+                offload=self._mem_offload_enqueue,
+                est_disk_load=lambda nb:
+                    self._tier_bw.est_load_seconds("local", nb))
         if heal:
             self._reap_stale_tmp()
             self._reap_fleet_metadata()
@@ -445,12 +497,22 @@ class Store:
         can change hands the instant this returns."""
         return FileLock(self._lease_path(sig)).probe() == "exclusive"
 
+    def mem_has(self, sig: str) -> bool:
+        """Resident in the memory tier right now (False without one).
+        Observability + tier pricing; like :meth:`computing`, never a
+        synchronization primitive."""
+        return self._mem is not None and self._mem.has(sig)
+
     def has(self, sig: str) -> bool:
-        """Entry reachable: local, or committed in the remote tier (the
-        planner's reuse test — a remote-only entry is loadable through
-        the read-through fetch path). Remote presence may be cached a
-        couple of seconds; dedupe-critical paths use :meth:`has_fresh`."""
+        """Entry reachable on any tier: local disk, memory-resident
+        (possibly memory-only in write-back mode — still loadable
+        in-process), or committed in the remote tier (loadable through
+        the read-through fetch path). This is the planner's reuse test.
+        Remote presence may be cached a couple of seconds;
+        dedupe-critical paths use :meth:`has_fresh`."""
         if self.has_local(sig):
+            return True
+        if self._mem is not None and self._mem.has(sig):
             return True
         return self.remote is not None and self.remote.exists(sig)
 
@@ -464,6 +526,8 @@ class Store:
         compute-once. (Also refreshes the cache, so the caller's
         follow-up ``has``/``load`` sees the entry.)"""
         if self.has_local(sig):
+            return True
+        if self._mem is not None and self._mem.has(sig):
             return True
         return (self.remote is not None
                 and self.remote.marker_meta(sig, fresh=True) is not None)
@@ -495,11 +559,31 @@ class Store:
             self.faults.crash_point(point)
 
     def save(self, sig: str, name: str, value: Any,
-             extra_meta: dict | None = None) -> SaveInfo:
+             extra_meta: dict | None = None, *,
+             _tier_admit: bool = True) -> SaveInfo:
         if isinstance(value, Chunked):
             return self._save_chunked(sig, name, value, extra_meta)
         t0 = time.perf_counter()
         host_value = jax.tree_util.tree_map(_leaf_to_host, value)
+        extra = extra_meta or {}
+        if (self._mem is not None and self._mem.writeback and _tier_admit
+                and not extra.get("is_chunk") and "chunked" not in extra):
+            # Write-back mode: the save lands in the memory tier only;
+            # the disk write happens at demotion (_spill_from_mem) or an
+            # explicit mem_flush(). nbytes=0 keeps the caller's budget
+            # ledger equal to on-disk bytes — the spill adjusts the
+            # bytes in when they actually land. Chunk entries and
+            # manifests always write through: the manifest commit point
+            # must never reference chunks another process cannot read.
+            wb_nbytes = tree_nbytes(host_value)
+            wb_meta = {"name": name, "sig": sig, "nbytes": wb_nbytes,
+                       "created": time.time()}
+            wb_meta.update(extra)
+            if self._mem.put(sig, host_value, wb_nbytes, name=name,
+                             meta=wb_meta, state="dirty"):
+                return SaveInfo(nbytes=0,
+                                seconds=time.perf_counter() - t0)
+            # Value exceeds the whole memory budget — write through.
         d = self._dir(sig)
         # Unique temp dir: concurrent saves of one signature must not
         # clobber each other's staging area (last publish wins below).
@@ -558,6 +642,12 @@ class Store:
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
+        if self._mem is not None and _tier_admit and not meta.get("chunked"):
+            # Write-through admission into the memory tier: the host
+            # snapshot is already in hand, so promoting it is free and
+            # makes the next same-process load a pointer handoff.
+            self._mem.put(sig, host_value, nbytes, name=name, meta=meta,
+                          state="durable")
         # Write-through: hand the published entry to the uploader (async
         # — off both the caller and the writer queue's drain path; after
         # the try so a queueing hiccup can't mis-report a landed save).
@@ -682,13 +772,23 @@ class Store:
         host_value = jax.tree_util.tree_map(_leaf_to_host, value)
         est = tree_nbytes(host_value)
         pending = PendingSave()
+        if (self._mem is not None and not isinstance(value, Chunked)
+                and not (extra_meta or {}).get("is_chunk")):
+            # Admit before the disk write lands ("queued": the writer
+            # thread owns a durable copy in flight, so demotion may drop
+            # freely) — in-process reuse never waits on the writer.
+            q_meta = {"name": name, "sig": sig, "nbytes": est,
+                      "created": time.time()}
+            q_meta.update(extra_meta or {})
+            self._mem.put(sig, host_value, est, name=name, meta=q_meta,
+                          state="queued")
         with self._writer_cv:
             while (self._inflight_bytes > 0
                    and self._inflight_bytes + est > self.max_inflight_bytes):
                 self._writer_cv.wait()
             self._inflight_bytes += est
             self._writer_queue.append(
-                (sig, name, host_value, extra_meta, est, pending))
+                ("save", sig, name, host_value, extra_meta, est, pending))
             if self._writer_thread is None or not self._writer_thread.is_alive():
                 self._writer_thread = threading.Thread(
                     target=self._writer_loop, name="store-writer", daemon=True)
@@ -704,8 +804,21 @@ class Store:
                     # demand, so an idle Store pins no thread for life.
                     self._writer_thread = None
                     return
-                sig, name, host_value, extra_meta, est, pending = \
-                    self._writer_queue.popleft()
+                item = self._writer_queue.popleft()
+                if item[0] == "save":
+                    self._writer_active.add(item[1])
+            if item[0] == "offload":
+                # Async device→host snapshot of a memory-tier entry
+                # (zero-copy sharded loads admit jax.Arrays; this moves
+                # them off-device off the critical path).
+                try:
+                    self._mem_offload_run(item[1])
+                except Exception:
+                    pass   # advisory: the device copy keeps serving
+                with self._writer_cv:
+                    self._writer_cv.notify_all()
+                continue
+            _, sig, name, host_value, extra_meta, est, pending = item
             try:
                 info = self.save(sig, name, host_value,
                                  extra_meta=extra_meta)
@@ -713,6 +826,7 @@ class Store:
             except BaseException as e:
                 pending._finish(None, e)
             with self._writer_cv:
+                self._writer_active.discard(sig)
                 self._inflight_bytes -= est
                 self._writer_cv.notify_all()
 
@@ -731,6 +845,75 @@ class Store:
             while self._writer_queue or self._inflight_bytes > 0:
                 self._writer_cv.wait()
         self.remote_drain()
+
+    # -- memory tier (TierStack head) --------------------------------------
+    def _mem_offload_enqueue(self, sig: str) -> None:
+        """Schedule an async device→host offload of a resident memory-
+        tier entry on the writer queue — the same dedicated thread (and
+        the same ``writer_drain`` barrier) that owns every other
+        off-critical-path materialization write."""
+        with self._writer_cv:
+            self._writer_queue.append(("offload", sig))
+            if self._writer_thread is None \
+                    or not self._writer_thread.is_alive():
+                self._writer_thread = threading.Thread(
+                    target=self._writer_loop, name="store-writer",
+                    daemon=True)
+                self._writer_thread.start()
+            self._writer_cv.notify_all()
+
+    def _mem_offload_run(self, sig: str) -> None:
+        """Writer-thread body of one offload: snapshot the entry's
+        device arrays to host and swap the snapshot in (a racing
+        re-admit of the signature wins — the swap is compare-and-set on
+        the exact pytree the snapshot was taken from)."""
+        if self._mem is None:
+            return
+        ent = self._mem.peek(sig)
+        if ent is None or not ent.has_device:
+            return
+        device_value = ent.value
+        host_value = jax.tree_util.tree_map(_leaf_to_host, device_value)
+        self._mem.replace_value(sig, host_value, expect=device_value)
+
+    def _spill_from_mem(self, sig: str, ent: MemEntry) -> None:
+        """Demote one dirty (memory-only) entry to the disk tier.
+
+        Called by the memory tier with the entry already removed from
+        residency. Skips the write when a durable copy already exists or
+        the writer queue owns one in flight — dropping is then free. The
+        landed bytes are adjusted into the fleet ledger: nobody reserved
+        them, but they are on disk, and ledger==disk outranks momentary
+        overshoot (the same honesty call as the read-through populate).
+
+        Crash points frame the torn-demotion window:
+        ``memtier:before_spill`` dies with nothing (or only a staging
+        ``.tmp-`` dir, reaped at the next heal) on disk — the entry
+        vanishes with the process, and recovery is a clean recompute
+        because no other process ever saw the signature;
+        ``memtier:after_spill`` dies with the entry committed and the
+        ledger already adjusted — nothing left to redo."""
+        with self._writer_cv:
+            queued = sig in self._writer_active or any(
+                it[0] == "save" and it[1] == sig
+                for it in self._writer_queue)
+        if queued or self.has_local(sig):
+            return
+        self._crash_point("memtier:before_spill")
+        extra = {k: v for k, v in ent.meta.items()
+                 if k not in ("name", "sig", "nbytes", "save_seconds",
+                              "created", "manifest")}
+        info = self.save(sig, ent.name or "spill", ent.value,
+                         extra_meta=extra, _tier_admit=False)
+        if info.nbytes and not info.replaced \
+                and os.path.exists(self.ledger_path):
+            StorageLedger(self.ledger_path).adjust(float(info.nbytes))
+        self._crash_point("memtier:after_spill")
+
+    def mem_flush(self) -> int:
+        """Write-back barrier: spill every dirty memory-tier entry to
+        disk (no-op without the tier). Returns the number spilled."""
+        return self._mem.flush() if self._mem is not None else 0
 
     # -- remote tier (write-through / read-through) ------------------------
     def _enqueue_upload(self, sig: str, meta: dict) -> None:
@@ -827,8 +1010,11 @@ class Store:
         d = self._dir(sig)
         tmp = (f"{d}.tmp-{os.getpid()}-{threading.get_ident()}"
                f"-{next(self._tmp_counter)}")
+        t0 = time.perf_counter()
         meta = self.remote.fetch(sig, tmp)
+        fetch_seconds = time.perf_counter() - t0
         if meta is None:
+            self.load_stats["remote"]["misses"] += 1
             shutil.rmtree(tmp, ignore_errors=True)
             return False
         published = False
@@ -844,6 +1030,9 @@ class Store:
         if published:
             self.remote_hits += 1
             nbytes = int(meta.get("nbytes", 0) or 0)
+            self.load_stats["remote"]["hits"] += 1
+            self.load_stats["remote"]["bytes"] += nbytes
+            self._tier_bw.observe("remote", "read", nbytes, fetch_seconds)
             if nbytes and os.path.exists(self.ledger_path):
                 StorageLedger(self.ledger_path).adjust(float(nbytes))
         return True
@@ -863,18 +1052,53 @@ class Store:
         fetch (the entry is published locally, then loaded); the fetch
         wall-time is included in the returned seconds so realized
         per-node runtimes stay honest.
+
+        With a memory tier, a resident signature short-circuits the
+        whole path: the stored pytree is handed back zero-copy (no
+        ``.npy`` read, no unpickle, no ``meta.json`` touch — the reuse
+        bump stays tier-local), and every successful disk/remote load
+        read-through promotes its value for the next caller.
         """
+        if self._mem is not None:
+            t0 = time.perf_counter()
+            ent = self._mem.get(sig)
+            if ent is not None:
+                value = ent.value
+                if sharding_for_leaf is not None:
+                    value = self._place_leaves(value, sharding_for_leaf)
+                seconds = time.perf_counter() - t0
+                self._tier_bw.observe("memory", "read", ent.nbytes,
+                                      seconds)
+                self.load_stats["memory"]["hits"] += 1
+                self.load_stats["memory"]["bytes"] += ent.nbytes
+                return value, seconds
+            self.load_stats["memory"]["misses"] += 1
         fetch_secs = 0.0
         for attempt in range(4):
             try:
-                value, seconds = self._load_once(sig, sharding_for_leaf)
+                value, seconds, meta = self._load_once(sig,
+                                                       sharding_for_leaf)
                 self._note_load(sig)
+                self.load_stats["local"]["hits"] += 1
+                self.load_stats["local"]["bytes"] += \
+                    int(meta.get("nbytes", 0) or 0)
+                if (self._mem is not None and not meta.get("chunked")
+                        and not isinstance(value, Chunked)):
+                    # Read-through promotion (chunk entries promote
+                    # individually; manifests don't — their payload is
+                    # not the value).
+                    self._mem.put(
+                        sig, value,
+                        int(meta.get("nbytes", 0) or tree_nbytes(value)),
+                        name=meta.get("name", ""), meta=meta,
+                        state="durable")
                 return value, seconds + fetch_secs
             except FileNotFoundError:
                 # Either we raced an overwrite of the same signature (tmp
                 # dir swapped in under us — retry against the fresh copy)
                 # or the entry was never local (remote tier fallback).
                 if self.remote is not None and not self.has_local(sig):
+                    self.load_stats["local"]["misses"] += 1
                     t0 = time.perf_counter()
                     fetched = self._fetch_remote(sig)
                     fetch_secs += time.perf_counter() - t0
@@ -884,7 +1108,26 @@ class Store:
                     raise
         raise AssertionError("unreachable")
 
-    def _load_once(self, sig: str, sharding_for_leaf) -> tuple[Any, float]:
+    @staticmethod
+    def _place_leaves(value: Any, sharding_for_leaf) -> Any:
+        """Re-place a memory-resident pytree's array leaves onto the
+        caller's mesh. Leaf numbering matches the saved manifest (both
+        are the pytree flatten order), so ``sharding_for_leaf`` sees the
+        same indices it would on a disk load; non-array leaves and
+        leaves the callback declines (None) pass through untouched."""
+        leaves, treedef = jax.tree_util.tree_flatten(value)
+        placed = []
+        for i, leaf in enumerate(leaves):
+            if isinstance(leaf, (np.ndarray, jax.Array)):
+                sharding = sharding_for_leaf(
+                    i, tuple(leaf.shape), np.dtype(leaf.dtype))
+                if sharding is not None:
+                    leaf = jax.device_put(leaf, sharding)
+            placed.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, placed)
+
+    def _load_once(self, sig: str, sharding_for_leaf
+                   ) -> tuple[Any, float, dict]:
         t0 = time.perf_counter()
         d = self._dir(sig)
         with open(os.path.join(d, "meta.json")) as f:
@@ -901,7 +1144,7 @@ class Store:
                 v, _ = self.load(cs)
                 chunks.append(v)
             value = Chunked(chunks, ch["chunk_sigs"], "concat")
-            return value, time.perf_counter() - t0
+            return value, time.perf_counter() - t0, meta
         with open(os.path.join(d, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
 
@@ -909,6 +1152,7 @@ class Store:
             i, ent = i_ent
             path = os.path.join(d, ent["file"])
             if ent["kind"] == "array":
+                self.npy_leaf_reads += 1
                 shape = tuple(ent["shape"])
                 try:
                     dtype = np.dtype(ent["dtype"])
@@ -937,7 +1181,7 @@ class Store:
         value = jax.tree_util.tree_unflatten(treedef, leaves)
         seconds = time.perf_counter() - t0
         self._update_bw("read", meta["nbytes"], seconds)
-        return value, seconds
+        return value, seconds, meta
 
     def _note_load(self, sig: str) -> None:
         """Record one observed load of ``sig`` (count + recency) in its
@@ -1169,13 +1413,19 @@ class Store:
 
     # -- metadata / management ---------------------------------------------------
     def meta(self, sig: str) -> dict:
-        """Entry metadata: local ``meta.json``, else the remote commit
-        marker (which carries name/nbytes/benefit stats — enough for the
-        planner's load-cost estimate on a not-yet-fetched entry)."""
+        """Entry metadata: local ``meta.json``, else the memory tier's
+        resident record (write-back entries have no disk copy yet), else
+        the remote commit marker (which carries name/nbytes/benefit
+        stats — enough for the planner's load-cost estimate on a
+        not-yet-fetched entry)."""
         try:
             with open(os.path.join(self._dir(sig), "meta.json")) as f:
                 return json.load(f)
         except (FileNotFoundError, NotADirectoryError):
+            if self._mem is not None:
+                ent = self._mem.peek(sig)
+                if ent is not None:
+                    return dict(ent.meta)
             if self.remote is not None:
                 marker = self.remote.marker_meta(sig)
                 if marker is not None:
@@ -1210,6 +1460,13 @@ class Store:
             with self._entry_lock(sig):
                 d = self._dir(sig)
                 if not os.path.exists(d):
+                    # Deletion is tier-wide: a memory-only resident copy
+                    # (write-back, or a promotion outliving a sibling's
+                    # disk delete) goes too, so tiers never disagree.
+                    # Its bytes live in the memory tier's own ledger —
+                    # nothing to credit to the disk ledger.
+                    if self._mem is not None:
+                        self._mem.drop(sig)
                     return 0
                 try:
                     with open(os.path.join(d, "meta.json")) as f:
@@ -1220,6 +1477,8 @@ class Store:
                     nbytes = 0
                 self._retire_dir(d)
                 self._index_apply(remove=[sig])
+            if self._mem is not None:
+                self._mem.drop(sig)
         finally:
             if lease_guard is not None:
                 lease_guard.release()
@@ -1386,17 +1645,29 @@ class Store:
         return out
 
     def tier_status(self) -> dict:
-        """Per-tier observability snapshot: used bytes, entry counts,
-        and live lease counts for the local tier and (when attached) the
-        remote tier — the numbers the operations guide's troubleshooting
-        table points at. ``remote`` is None without a tier."""
+        """Per-tier observability snapshot, in TierStack order (memory →
+        local → remote). Every attached tier reports one **unified
+        record** — ``{name, bytes, budget, entries, leases, hits,
+        misses}`` — plus tier-specific extras (memory: dirty/demotions/
+        spills/offloads; local: ``remote_hits``; remote: ``available``
+        and the transfer stats). ``budget`` is None where the store does
+        not own one (the disk budget lives in the Materializer's
+        ledger). Unattached tiers are None. The server's
+        ``status()["tiers"]`` returns exactly this snapshot — one schema
+        at both layers."""
         entries = self.entries()
         status: dict = {
+            "memory": (self._mem.status()
+                       if self._mem is not None else None),
             "local": {
+                "name": "local",
                 "bytes": sum(int(m.get("nbytes", 0) or 0)
                              for m in entries.values()),
+                "budget": None,
                 "entries": len(entries),
                 "leases": self.lease_counts(),
+                "hits": self.load_stats["local"]["hits"],
+                "misses": self.load_stats["local"]["misses"],
                 "remote_hits": self.remote_hits,
             },
             "remote": None,
@@ -1404,11 +1675,15 @@ class Store:
         if self.remote is not None:
             remote_entries = self.remote.entries()
             status["remote"] = {
+                "name": "remote",
                 "available": self.remote.available(),
                 "bytes": sum(int(m.get("nbytes", 0) or 0)
                              for m in remote_entries.values()),
+                "budget": None,
                 "entries": len(remote_entries),
                 "leases": self.remote.lease_counts(),
+                "hits": self.load_stats["remote"]["hits"],
+                "misses": self.load_stats["remote"]["misses"],
                 **self.remote.stats.snapshot(),
             }
         return status
@@ -1422,6 +1697,21 @@ class Store:
             return
         self._bw.update(key, nbytes / seconds)
 
-    def est_load_seconds(self, nbytes: float) -> float:
-        bw = self._bw.get("read") or self._bw.get("write") or 500e6
-        return nbytes / bw + 1e-4
+    def est_load_seconds(self, nbytes: float, sig: str | None = None
+                         ) -> float:
+        """Estimated seconds to load ``nbytes`` — the paper's ``l_i``,
+        priced per tier: with a ``sig``, the cheapest tier that can
+        serve it (memory → local → remote, each with its own measured
+        EWMA bandwidth and latency floor). Without one (or for an entry
+        resident nowhere) the local disk tier is priced — the durable
+        default every *write* decision reasons about, and numerically
+        identical to the historical single-number estimate."""
+        tier = "local"
+        if sig is not None:
+            if self._mem is not None and self._mem.has(sig):
+                tier = "memory"
+            elif self.has_local(sig):
+                tier = "local"
+            elif self.remote is not None and self.remote.exists(sig):
+                tier = "remote"
+        return self._tier_bw.est_load_seconds(tier, nbytes)

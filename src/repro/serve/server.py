@@ -328,7 +328,9 @@ class SessionServer:
                                sto.remote,
                                max_retries=res.remote_max_retries,
                                retry_backoff=res.remote_retry_backoff,
-                               faults=res.faults))
+                               faults=res.faults),
+                           mem_budget_bytes=sto.mem_budget_bytes,
+                           mem_writeback=sto.mem_writeback)
         self.cost_model = CostModel(os.path.join(workdir, "costs.json"))
         if not self.store.any_live_lease():
             StorageLedger(self.store.ledger_path).reset(
@@ -521,6 +523,16 @@ class SessionServer:
         therefore estimates near the appended batch's cost, not a cold
         retrain; ``n_chunked`` counts delta-priced nodes and
         ``chunk_hit_s`` the per-chunk savings folded into ``hit_s``.
+
+        Tier-aware hit pricing: ``hit_load_s`` is what the hits will
+        actually cost to *serve*, each priced at the cheapest tier that
+        holds it (``Store.est_load_seconds(nbytes, sig=...)`` — a
+        memory-resident signature is near-free, a remote-only one pays
+        fetch bandwidth), and ``n_hit_mem`` counts the hits resident in
+        the memory tier. ``marginal_s`` deliberately ignores this load
+        cost (hits stay free at the margin, as before) — the fields let
+        the search driver tie-break toward candidates whose hits are
+        already hot in RAM.
         """
         wf = self._materialize_workflow(workflow, params)
         dag = wf.build()
@@ -530,7 +542,9 @@ class SessionServer:
         with self._cv:
             inflight = self._inflight_sigs_locked()
         total = hit = follow = queued_shared = chunk_hit = 0.0
+        hit_load = 0.0
         n_hit = n_follow = n_queued = n_lease = n_chunked = 0
+        n_hit_mem = 0
         seen: set[str] = set()
         for n in sliced.topological():
             sig = sigs[n]
@@ -543,6 +557,17 @@ class SessionServer:
             if self.store.has(sig):
                 hit += c
                 n_hit += 1
+                if self.store.mem_has(sig):
+                    n_hit_mem += 1
+                try:
+                    m = self.store.meta(sig)
+                    nb = (int(m.get("nbytes", 0) or 0)
+                          + int(m.get("chunked", {})
+                                .get("chunk_bytes", 0) or 0))
+                except (OSError, ValueError):
+                    nb = 0   # raced a delete — price it as gone
+                else:
+                    hit_load += self.store.est_load_seconds(nb, sig=sig)
             elif sig in inflight:
                 follow += c
                 n_follow += 1
@@ -568,6 +593,7 @@ class SessionServer:
             "n_hit": n_hit, "n_follow": n_follow,
             "n_queued_shared": n_queued, "n_live_leases": n_lease,
             "n_chunked": n_chunked, "chunk_hit_s": chunk_hit,
+            "hit_load_s": hit_load, "n_hit_mem": n_hit_mem,
         }
 
     def cancel(self, job: Job | str,

@@ -291,6 +291,91 @@ def test_crash_mid_chunk_publish_retry_is_dedup_aware(tmp_path):
     assert store.gc_orphan_chunks(min_age_seconds=0.0) == (0, 0)
 
 
+def test_crash_with_memory_only_entry_recovers_clean(tmp_path):
+    """Process death while a write-back entry is resident only in RAM:
+    the entry dies with the process — no disk bytes, no ledger charge,
+    and a restarted store sees a clean miss that recomputes normally."""
+    store = Store(str(tmp_path / "store"), mem_budget_bytes=64e6,
+                  mem_writeback=True)
+    StorageLedger(store.ledger_path).ensure(0.0)
+    store.save("ab12", "node", _value(5))
+    assert store.mem_has("ab12") and not store.has_local("ab12")
+    assert store.total_bytes() == 0
+    assert StorageLedger(store.ledger_path).used() == 0
+
+    # "kill -9": the first store's RAM vanishes; a fresh process opens
+    # the same workdir and must see no trace of the signature.
+    survivor = Store(str(tmp_path / "store"), mem_budget_bytes=64e6)
+    assert not survivor.has("ab12")
+    assert survivor.total_bytes() == 0
+    assert StorageLedger(survivor.ledger_path).used() == 0   # no drift
+
+    # Clean recompute: the rerun saves write-through and stays consistent.
+    survivor.save("ab12", "node", _value(5))
+    got, _ = survivor.load("ab12")
+    np.testing.assert_array_equal(got["w"], _value(5)["w"])
+
+
+def test_crash_before_spill_is_invisible_and_retry_reconciles(tmp_path):
+    """Crash at ``memtier:before_spill`` — demotion decided, zero
+    durable bytes written. The torn spill must be invisible (no entry,
+    no partial files after heal, ledger == disk == 0) and the retried
+    save + flush must leave ledger == disk."""
+    value_a = np.arange(1500, dtype=np.float64)      # 12KB each
+    value_b = np.arange(1500, 3000, dtype=np.float64)
+    store = Store(str(tmp_path / "store"), mem_budget_bytes=20_000,
+                  mem_writeback=True)
+    StorageLedger(store.ledger_path).ensure(0.0)
+    store.faults = FaultPlan(seed=CHAOS_SEED).crash_at(
+        "memtier:before_spill")
+    store.save("aa11", "a", value_a)
+    with pytest.raises(InjectedCrash):
+        store.save("bb22", "b", value_b)             # evicts aa11 → spill
+
+    # A fresh process (heal reaps any .tmp- staging) sees nothing.
+    survivor = Store(str(tmp_path / "store"), mem_budget_bytes=20_000,
+                     mem_writeback=True)
+    assert not survivor.has("aa11") and not survivor.has("bb22")
+    assert survivor.total_bytes() == 0
+    assert not [d for d in os.listdir(survivor.root)
+                if d.startswith(".tmp-")]
+    assert StorageLedger(survivor.ledger_path).used() == 0
+
+    # Retry: recompute both, force everything durable — ledger == disk.
+    survivor.save("aa11", "a", value_a)
+    survivor.save("bb22", "b", value_b)
+    survivor.mem_flush()
+    assert survivor.has_local("aa11") and survivor.has_local("bb22")
+    assert (StorageLedger(survivor.ledger_path).used()
+            == survivor.total_bytes() > 0)
+    got, _ = survivor.load("aa11")
+    np.testing.assert_array_equal(got, value_a)
+
+
+def test_crash_after_spill_left_entry_committed_and_ledger_true(tmp_path):
+    """Crash at ``memtier:after_spill`` — the spilled entry is already
+    published and its bytes already adjusted into the fleet ledger, so
+    a restarted store finds a complete, consistent disk tier with
+    nothing left to redo."""
+    value_a = np.arange(1500, dtype=np.float64)
+    store = Store(str(tmp_path / "store"), mem_budget_bytes=20_000,
+                  mem_writeback=True)
+    StorageLedger(store.ledger_path).ensure(0.0)
+    store.faults = FaultPlan(seed=CHAOS_SEED).crash_at(
+        "memtier:after_spill")
+    store.save("aa11", "a", value_a)
+    with pytest.raises(InjectedCrash):
+        store.save("bb22", "b",
+                   np.arange(1500, 3000, dtype=np.float64))
+
+    survivor = Store(str(tmp_path / "store"), mem_budget_bytes=20_000)
+    assert survivor.has_local("aa11")                # spill committed
+    assert (StorageLedger(survivor.ledger_path).used()
+            == survivor.total_bytes() > 0)           # already adjusted
+    got, _ = survivor.load("aa11")
+    np.testing.assert_array_equal(got, value_a)
+
+
 def test_session_splice_crash_retry_commits_bit_identical(tmp_path):
     """End-to-end: a delta run dies mid-splice; the surviving partial
     state is invisible to readers, the retried run commits bit-identical
