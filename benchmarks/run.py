@@ -46,13 +46,20 @@ Prints ``name,us_per_call,derived`` CSV rows:
       hit path, bit-identically to the cold run; a memory hit must load
       ≥5x faster than a disk reload of the same signature; per-tier
       ledgers must equal bytes held after the runs.
+  bench_multitenant         — ISSUE 10: consistent-hash (prefix-affine)
+      routing vs seeded-random placement across a 2-shard fleet on
+      warm-shard reruns: hash routing must land every repeat submission
+      on the shard already holding its prefix (0 recomputes, asserted),
+      random placement recomputes prefixes on cold shards; the row
+      reports the wall-clock speedup (acceptance bar ≥ 1.3x).
 
 Env knobs: HELIX_BENCH_ITERS (default 10), HELIX_BENCH_WORKFLOWS (csv list),
 HELIX_BENCH_PAR_WORKERS (worker-pool width for the pipelined engine),
 HELIX_BENCH_SWEEP_VARIANTS (sweep arms, default 4), HELIX_BENCH_SWEEP_SCALE
 (input-size scale for the sweep bench, default 1 — CI smoke uses ~0.05),
 HELIX_BENCH_LM_STEPS / HELIX_BENCH_LM_DM (bench_tier LM train steps and
-d_model, defaults 4 / 128).
+d_model, defaults 4 / 128), HELIX_BENCH_TENANT_FAMILIES
+(bench_multitenant workflow families, default 6).
 """
 from __future__ import annotations
 
@@ -888,6 +895,128 @@ def bench_engine_overlap() -> None:
           f"speedup={secs[1] / max(secs[width], 1e-9):.2f}x", flush=True)
 
 
+def bench_multitenant() -> None:
+    """ISSUE 10: consistent-hash routing vs random placement, 2 shards.
+
+    A fleet of two session servers (fair schedule, tenancy on) serves
+    N workflow families through a :class:`~repro.serve.FleetRouter`.
+    After a warm-up pass places every family's prefix on its rendezvous
+    home shard, the same submissions rerun twice against the warm fleet:
+
+    * ``route="hash"`` (the default): every repeat lands on the shard
+      already holding its prefix — **zero** prefix recomputes, asserted
+      structurally (a fresh router instance is used, proving placement
+      is state-free);
+    * ``route="random"`` (seeded, the control): placement by coin flip
+      sends a fraction of the families to the cold shard, which — with
+      no shared remote tier — must recompute their prefixes from
+      scratch.
+
+    The row reports both wall clocks and the recompute counts; the
+    acceptance bar is hash ≥ 1.3x over random on the warm rerun. Also
+    checks each shard's budget ledger still equals its on-disk bytes
+    after all three passes (tenancy's scoped reservations reconcile).
+    """
+    import threading
+
+    from repro.core import StorageLedger
+    from repro.core.config import EngineConfig
+    from repro.core.workflow import Workflow
+    from repro.serve import FleetRouter, SessionServer, TenantSpec
+
+    scale = float(os.environ.get("HELIX_BENCH_SWEEP_SCALE", "1"))
+    n_fam = int(os.environ.get("HELIX_BENCH_TENANT_FAMILIES", "6"))
+    work = max(40, int(150 * scale))
+    dim = 128
+
+    lock = threading.Lock()
+    feat_calls: dict[str, int] = {}
+
+    def build(family="f0", reg=0.1):
+        wf = Workflow(f"{family}-{reg}")
+        src = wf.source(
+            "src",
+            lambda d=dim: np.arange(d * d, dtype=np.float64).reshape(d, d),
+            config=("v1", family))
+
+        def featurize(m, fam=family):
+            with lock:
+                feat_calls[fam] = feat_calls.get(fam, 0) + 1
+            acc = m.copy()
+            for _ in range(work):
+                acc = np.tanh(acc @ m.T @ m / m.size)
+            return acc
+
+        feat = wf.extractor("feat", featurize, [src],
+                            config=("feat", family))
+        model = wf.learner("model",
+                           lambda z, r=reg: float(np.sum(z * z)) * r,
+                           [feat], config=("LR", reg))
+        out = wf.reducer("eval", lambda m: {"score": m}, [model],
+                         config=("eval",))
+        wf.output(out)
+        return wf
+
+    registry = {"fam": build}
+    servers = {}
+    for sid in ("s0", "s1"):
+        workdir = os.path.join(ROOT, f"multitenant_{sid}")
+        shutil.rmtree(workdir, ignore_errors=True)
+        servers[sid] = SessionServer(
+            workdir, registry=registry,
+            tenants={"*": TenantSpec(weight=1.0)},
+            engine=EngineConfig(schedule="fair", n_sessions=2),
+            poll_interval=0.01)
+    arms = [(f"f{i}", 0.1) for i in range(n_fam)]
+
+    def run_all(router):
+        jobs = [router.submit("fam", {"family": f, "reg": r})
+                for f, r in arms]
+        for j in jobs:
+            out = router.wait(j, timeout=600.0)
+            assert out["status"] == "done", out
+
+    def total_feats():
+        with lock:
+            return sum(feat_calls.values())
+
+    try:
+        run_all(FleetRouter(servers, registry=registry, tenant="warm"))
+        warmed = total_feats()
+        assert warmed == n_fam, "warm pass must compute each family once"
+
+        t0 = time.perf_counter()
+        run_all(FleetRouter(servers, registry=registry, tenant="rerun"))
+        hash_s = time.perf_counter() - t0
+        hash_recomputed = total_feats() - warmed
+        assert hash_recomputed == 0, \
+            "hash routing recomputed a cached prefix on a warm fleet"
+
+        seed = int(os.environ.get("HELIX_CHAOS_SEED", "1234"))
+        t0 = time.perf_counter()
+        run_all(FleetRouter(servers, registry=registry, tenant="rerun",
+                            route="random", seed=seed))
+        random_s = time.perf_counter() - t0
+        random_recomputed = total_feats() - warmed - hash_recomputed
+
+        drift = max(abs(StorageLedger(s.store.ledger_path).used()
+                        - s.store.total_bytes())
+                    for s in servers.values())
+    finally:
+        for s in servers.values():
+            s.shutdown()
+
+    speedup = random_s / max(hash_s, 1e-9)
+    print(f"multitenant_routing,"
+          f"{hash_s * 1e6 / len(arms):.0f},"
+          f"hash_s={hash_s:.3f};random_s={random_s:.3f};"
+          f"speedup={speedup:.2f}x;"
+          f"families={n_fam};shards=2;seed={seed};"
+          f"hash_recomputed={hash_recomputed};"
+          f"random_recomputed={random_recomputed};"
+          f"ledger_drift_b={drift:.0f}", flush=True)
+
+
 def main() -> None:
     bench_cumulative_runtime()
     bench_storage()
@@ -902,6 +1031,7 @@ def main() -> None:
     bench_incremental()
     bench_tier()
     bench_engine_overlap()
+    bench_multitenant()
 
 
 if __name__ == "__main__":

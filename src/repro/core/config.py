@@ -64,8 +64,10 @@ class EngineConfig:
         for a standalone session; under a server's ``"prefix"`` schedule
         the live multiplicity map supersedes it anyway.
     ``schedule``
-        Server dispatch policy: ``"prefix"`` (shared-prefix-first) or
-        ``"fifo"`` (arrival order, the PR 2 baseline).
+        Server dispatch policy: ``"prefix"`` (shared-prefix-first),
+        ``"fifo"`` (arrival order, the PR 2 baseline), or ``"fair"``
+        (weighted fair share across tenants, prefix-first within each —
+        requires the server's ``tenants=`` table for the weights).
     ``n_sessions``
         Concurrent session slots. ``None`` = call-site default (4 for a
         server, all variants for a sweep).

@@ -125,13 +125,20 @@ class Evictor:
     map. ``cost_model`` supplies historical reuse counts
     (:meth:`CostModel.reuse_counts`); both are optional — a standalone
     session still gets cost-metadata-ranked LRU-tie-broken eviction.
+    ``on_evict`` is an audit observer called as ``on_evict(sig, entry,
+    freed_bytes)`` after each successful eviction — the multi-tenant
+    server records these so the isolation harness can *prove* no live
+    or leased entry was ever evicted (observer exceptions are swallowed;
+    auditing must not break admission).
     """
 
     def __init__(self, store, cost_model=None,
-                 live_multiplicity: Callable[[str], bool] | None = None):
+                 live_multiplicity: Callable[[str], bool] | None = None,
+                 on_evict: Callable[[str, dict, float], None] | None = None):
         self.store = store
         self.cost_model = cost_model
         self.live_multiplicity = live_multiplicity
+        self.on_evict = on_evict
         self.stats = EvictionStats()
         # Serializes rankings within this process; cross-process safety
         # comes from Store.delete's lease+lock path and the ledger's
@@ -255,6 +262,11 @@ class Evictor:
                             self.stats.n_skipped_leased += 1
                         continue
                     credit(freed)
+                    if self.on_evict is not None:
+                        try:
+                            self.on_evict(sig, ent, freed)
+                        except Exception:
+                            pass
                     self.stats.n_evicted += 1
                     self.stats.bytes_evicted += freed
                     freed_total += freed

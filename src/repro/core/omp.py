@@ -266,6 +266,15 @@ class Materializer:
             return True
         if not evict or self.evictor is None:
             return False
+        scope_exhausted = getattr(self.ledger, "scope_exhausted", None)
+        if scope_exhausted is not None and scope_exhausted(est_bytes):
+            # Tenant-scoped ledger refused on the tenant's *own* quota:
+            # eviction frees fleet bytes, never quota room, so evicting
+            # (other tenants') entries could not make this reservation
+            # succeed. Refuse without touching the store — a
+            # quota-exhausted tenant degrades to not-materializing, it
+            # never displaces a neighbor's cache.
+            return False
         used = (self.ledger.used if self.ledger is not None
                 else lambda: self.used_bytes)
         self.evictor.evict_to_fit(est_bytes, self.storage_budget_bytes,
@@ -305,9 +314,17 @@ class Materializer:
         evictions). Ledger mode: ledger-only — ``used_bytes`` tracks this
         instance's own reservations and must not absorb foreign credits.
         Without a ledger, ``used_bytes`` *is* the whole-store tally, so
-        the credit lands there."""
+        the credit lands there. A tenant-scoped ledger distinguishes the
+        two credits itself (``credit_foreign`` lands fleet-side only —
+        the tenant's quota meter must not absorb bytes another tenant
+        reserved); a plain :class:`StorageLedger` has no such method and
+        takes the credit as a release."""
         if self.ledger is not None:
-            self.ledger.release(nbytes)
+            foreign = getattr(self.ledger, "credit_foreign", None)
+            if foreign is not None:
+                foreign(nbytes)
+            else:
+                self.ledger.release(nbytes)
             return
         # No ledger: used_bytes is the whole-store tally, same as release.
         self.release(nbytes)

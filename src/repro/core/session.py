@@ -180,6 +180,7 @@ class IterativeSession:
                  evict_to_admit: bool = UNSET,
                  evictor: Evictor | None = None,
                  live_sigs: Callable[[str], bool] | None = None,
+                 ledger=None,
                  *,
                  engine: EngineConfig | None = None,
                  storage: StoreConfig | None = None,
@@ -226,8 +227,11 @@ class IterativeSession:
                        mem_writeback=sto.mem_writeback)
         self.cost_model = cost_model if cost_model is not None \
             else CostModel(os.path.join(workdir, "costs.json"))
-        ledger = None
-        if sto.shared_budget:
+        # ``ledger=`` injects a pre-built budget ledger — the tenant
+        # server passes a ScopedLedger so this session's reservations
+        # also debit its tenant's quota; default is the plain fleet
+        # StorageLedger whenever the budget is shared.
+        if ledger is None and sto.shared_budget:
             ledger = StorageLedger(self.store.ledger_path)
             ledger.ensure(float(self.store.total_bytes()))
         self.evictor = evictor

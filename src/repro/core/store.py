@@ -346,6 +346,11 @@ class Store:
             "remote": {"hits": 0, "misses": 0, "bytes": 0},
         }
         self.npy_leaf_reads = 0
+        # load() runs concurrently on executor worker threads; bare
+        # ``+=`` on these counters drops increments under contention
+        # (read-modify-write races), which the tenant stress harness
+        # observes as tier_status() hit counts drifting from truth.
+        self._stats_lock = threading.Lock()
         # Signatures whose disk write the writer thread currently owns
         # (popped from the queue, save not yet landed): a memory-tier
         # spill of such a signature may drop instead of double-saving.
@@ -1014,7 +1019,8 @@ class Store:
         meta = self.remote.fetch(sig, tmp)
         fetch_seconds = time.perf_counter() - t0
         if meta is None:
-            self.load_stats["remote"]["misses"] += 1
+            with self._stats_lock:
+                self.load_stats["remote"]["misses"] += 1
             shutil.rmtree(tmp, ignore_errors=True)
             return False
         published = False
@@ -1028,10 +1034,11 @@ class Store:
                 self._index_apply(add={sig: self._index_entry(meta)})
                 published = True
         if published:
-            self.remote_hits += 1
             nbytes = int(meta.get("nbytes", 0) or 0)
-            self.load_stats["remote"]["hits"] += 1
-            self.load_stats["remote"]["bytes"] += nbytes
+            with self._stats_lock:
+                self.remote_hits += 1
+                self.load_stats["remote"]["hits"] += 1
+                self.load_stats["remote"]["bytes"] += nbytes
             self._tier_bw.observe("remote", "read", nbytes, fetch_seconds)
             if nbytes and os.path.exists(self.ledger_path):
                 StorageLedger(self.ledger_path).adjust(float(nbytes))
@@ -1069,19 +1076,22 @@ class Store:
                 seconds = time.perf_counter() - t0
                 self._tier_bw.observe("memory", "read", ent.nbytes,
                                       seconds)
-                self.load_stats["memory"]["hits"] += 1
-                self.load_stats["memory"]["bytes"] += ent.nbytes
+                with self._stats_lock:
+                    self.load_stats["memory"]["hits"] += 1
+                    self.load_stats["memory"]["bytes"] += ent.nbytes
                 return value, seconds
-            self.load_stats["memory"]["misses"] += 1
+            with self._stats_lock:
+                self.load_stats["memory"]["misses"] += 1
         fetch_secs = 0.0
         for attempt in range(4):
             try:
                 value, seconds, meta = self._load_once(sig,
                                                        sharding_for_leaf)
                 self._note_load(sig)
-                self.load_stats["local"]["hits"] += 1
-                self.load_stats["local"]["bytes"] += \
-                    int(meta.get("nbytes", 0) or 0)
+                with self._stats_lock:
+                    self.load_stats["local"]["hits"] += 1
+                    self.load_stats["local"]["bytes"] += \
+                        int(meta.get("nbytes", 0) or 0)
                 if (self._mem is not None and not meta.get("chunked")
                         and not isinstance(value, Chunked)):
                     # Read-through promotion (chunk entries promote
@@ -1098,7 +1108,8 @@ class Store:
                 # dir swapped in under us — retry against the fresh copy)
                 # or the entry was never local (remote tier fallback).
                 if self.remote is not None and not self.has_local(sig):
-                    self.load_stats["local"]["misses"] += 1
+                    with self._stats_lock:
+                        self.load_stats["local"]["misses"] += 1
                     t0 = time.perf_counter()
                     fetched = self._fetch_remote(sig)
                     fetch_secs += time.perf_counter() - t0
@@ -1152,7 +1163,8 @@ class Store:
             i, ent = i_ent
             path = os.path.join(d, ent["file"])
             if ent["kind"] == "array":
-                self.npy_leaf_reads += 1
+                with self._stats_lock:
+                    self.npy_leaf_reads += 1
                 shape = tuple(ent["shape"])
                 try:
                     dtype = np.dtype(ent["dtype"])
@@ -1656,6 +1668,9 @@ class Store:
         ``status()["tiers"]`` returns exactly this snapshot — one schema
         at both layers."""
         entries = self.entries()
+        with self._stats_lock:
+            stats = {tier: dict(d) for tier, d in self.load_stats.items()}
+            remote_hits = self.remote_hits
         status: dict = {
             "memory": (self._mem.status()
                        if self._mem is not None else None),
@@ -1666,9 +1681,9 @@ class Store:
                 "budget": None,
                 "entries": len(entries),
                 "leases": self.lease_counts(),
-                "hits": self.load_stats["local"]["hits"],
-                "misses": self.load_stats["local"]["misses"],
-                "remote_hits": self.remote_hits,
+                "hits": stats["local"]["hits"],
+                "misses": stats["local"]["misses"],
+                "remote_hits": remote_hits,
             },
             "remote": None,
         }
@@ -1682,8 +1697,8 @@ class Store:
                 "budget": None,
                 "entries": len(remote_entries),
                 "leases": self.remote.lease_counts(),
-                "hits": self.load_stats["remote"]["hits"],
-                "misses": self.load_stats["remote"]["misses"],
+                "hits": stats["remote"]["hits"],
+                "misses": stats["remote"]["misses"],
                 **self.remote.stats.snapshot(),
             }
         return status

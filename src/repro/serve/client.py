@@ -50,7 +50,7 @@ import socket
 import time
 from typing import Any, Callable, Mapping, Protocol, runtime_checkable
 
-from .protocol import ServerBusy, recv_msg, send_msg
+from .protocol import QuotaExceeded, ServerBusy, recv_msg, send_msg
 from .server import SessionServer
 
 
@@ -94,6 +94,10 @@ class _ClientBase:
     #: full) before :class:`ServerBusy` propagates to the caller.
     busy_retries: int = 8
 
+    #: Tenant identity stamped on every submit frame (the server's
+    #: ``tenants`` table resolves it; "default" when tenancy is off).
+    tenant: str = "default"
+
     def _rpc(self, **msg: Any) -> dict:
         raise NotImplementedError
 
@@ -105,6 +109,14 @@ class _ClientBase:
         if not resp.get("ok"):
             if resp.get("busy"):
                 raise ServerBusy(float(resp.get("retry_after", 0.5)))
+            if resp.get("quota_exceeded"):
+                # Never auto-retried: unlike ``busy``, waiting cannot
+                # free a quota — the refusal goes straight to the caller.
+                raise QuotaExceeded(
+                    str(resp.get("tenant", "?")),
+                    str(resp.get("resource", "?")),
+                    limit=resp.get("limit"), used=resp.get("used"),
+                    detail=resp.get("error"))
             raise ServerError(resp.get("error", "unknown server error"))
         return resp
 
@@ -123,13 +135,16 @@ class _ClientBase:
         dispatch class (higher dispatches first). A ``busy`` response
         (bounded admission queue full) is retried after the server's
         ``retry_after`` hint, ``busy_retries`` times, then raises
-        :class:`~repro.serve.protocol.ServerBusy`."""
+        :class:`~repro.serve.protocol.ServerBusy`. A ``quota_exceeded``
+        refusal raises :class:`~repro.serve.protocol.QuotaExceeded`
+        immediately (never retried — the quota will not free itself)."""
         attempts = 0
         while True:
             try:
                 resp = self._rpc(op="submit", workflow=workflow,
                                  params=dict(params or {}), name=name,
-                                 timeout=timeout, priority=priority)
+                                 timeout=timeout, priority=priority,
+                                 tenant=self.tenant)
                 return resp["job"]
             except ServerBusy as e:
                 attempts += 1
@@ -215,11 +230,13 @@ class ServerClient(_ClientBase):
 
     def __init__(self, sock: socket.socket, *,
                  timeout: float | None = None,
-                 reconnect: Callable[[], socket.socket] | None = None):
+                 reconnect: Callable[[], socket.socket] | None = None,
+                 tenant: str = "default"):
         """Wrap a connected socket; see the class docstring for knobs."""
         self._sock = sock
         self.timeout = timeout
         self._reconnect = reconnect
+        self.tenant = str(tenant)
         if timeout is not None:
             self._sock.settimeout(timeout)
 
@@ -311,9 +328,11 @@ class InProcessClient(_ClientBase):
     get that for free from the connection handler).
     """
 
-    def __init__(self, server: SessionServer):
+    def __init__(self, server: SessionServer, *,
+                 tenant: str = "default"):
         """Wrap a live server; calls go through its ``_handle``."""
         self._server = server
+        self.tenant = str(tenant)
 
     def _rpc(self, **msg: Any) -> dict:
         return self._check(self._server._handle(msg))
@@ -328,13 +347,13 @@ class InProcessClient(_ClientBase):
         """No-op (kept for interface parity with ServerClient)."""
 
 
-def connect_unix(path: str, *, timeout: float | None = None
-                 ) -> ServerClient:
+def connect_unix(path: str, *, timeout: float | None = None,
+                 tenant: str = "default") -> ServerClient:
     """Connect to a session server's unix domain socket.
 
     ``timeout`` (seconds) bounds every socket operation and arms the
     client's reconnect-on-error path; None keeps the legacy blocking
-    behavior."""
+    behavior. ``tenant`` is stamped on every submit frame."""
     def dial() -> socket.socket:
         sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         if timeout is not None:
@@ -342,16 +361,17 @@ def connect_unix(path: str, *, timeout: float | None = None
         sock.connect(path)
         return sock
 
-    return ServerClient(dial(), timeout=timeout, reconnect=dial)
+    return ServerClient(dial(), timeout=timeout, reconnect=dial,
+                        tenant=tenant)
 
 
-def connect_tcp(host: str, port: int, *, timeout: float | None = None
-                ) -> ServerClient:
+def connect_tcp(host: str, port: int, *, timeout: float | None = None,
+                tenant: str = "default") -> ServerClient:
     """Connect to a session server's TCP endpoint.
 
     ``timeout`` (seconds) bounds every socket operation and arms the
     client's reconnect-on-error path; None keeps the legacy blocking
-    behavior."""
+    behavior. ``tenant`` is stamped on every submit frame."""
     def dial() -> socket.socket:
         sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         if timeout is not None:
@@ -359,11 +379,13 @@ def connect_tcp(host: str, port: int, *, timeout: float | None = None
         sock.connect((host, port))
         return sock
 
-    return ServerClient(dial(), timeout=timeout, reconnect=dial)
+    return ServerClient(dial(), timeout=timeout, reconnect=dial,
+                        tenant=tenant)
 
 
 def connect(target: "SessionServer | Client | str | tuple[str, int]", *,
-            timeout: float | None = None) -> Client:
+            timeout: float | None = None,
+            tenant: str = "default") -> Client:
     """One entry point for every transport; returns a :class:`Client`.
 
     Dispatch on ``target``:
@@ -373,24 +395,35 @@ def connect(target: "SessionServer | Client | str | tuple[str, int]", *,
     * ``(host, port)`` tuple → TCP;
     * ``"host:port"`` string → TCP;
     * any other string → unix-domain socket path;
-    * an existing client → returned unchanged (lets APIs accept "server,
-      address, or client" uniformly — the search driver does).
+    * an existing client — anything structurally satisfying
+      :class:`Client`, including a
+      :class:`~repro.serve.router.FleetRouter` — → returned unchanged
+      (lets APIs accept "server, address, router, or client" uniformly —
+      the search driver does).
 
     ``timeout`` is forwarded to the socket transports (per-RPC bound +
     reconnect-on-error, see :func:`connect_unix`); it is meaningless —
-    and ignored — for the in-process transport.
+    and ignored — for the in-process transport. ``tenant`` is the
+    identity stamped on every submit (ignored for an existing client,
+    which keeps its own).
     """
     if isinstance(target, SessionServer):
-        return InProcessClient(target)
+        return InProcessClient(target, tenant=tenant)
     if isinstance(target, _ClientBase):
         return target
     if isinstance(target, tuple) and len(target) == 2:
-        return connect_tcp(str(target[0]), int(target[1]), timeout=timeout)
+        return connect_tcp(str(target[0]), int(target[1]), timeout=timeout,
+                           tenant=tenant)
     if isinstance(target, str):
         host, sep, port = target.rpartition(":")
         if sep and port.isdigit() and host and "/" not in host:
-            return connect_tcp(host, int(port), timeout=timeout)
-        return connect_unix(target, timeout=timeout)
+            return connect_tcp(host, int(port), timeout=timeout,
+                               tenant=tenant)
+        return connect_unix(target, timeout=timeout, tenant=tenant)
+    if isinstance(target, Client):
+        # Structural match (runtime_checkable Protocol): a FleetRouter
+        # or any client-shaped object passes through unchanged.
+        return target
     raise TypeError(
         f"connect() expects a SessionServer, client, address string, or "
         f"(host, port) tuple; got {type(target).__name__}")

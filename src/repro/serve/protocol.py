@@ -12,7 +12,8 @@ Request messages (``op`` selects the operation)::
     {"op": "hello"}
     {"op": "submit", "workflow": <registry name>, "params": {...},
      "name": <optional job label>, "timeout": <optional s>,
-     "priority": <optional int, default 0; higher dispatches first>}
+     "priority": <optional int, default 0; higher dispatches first>,
+     "tenant": <optional tenant id, default "default">}
     {"op": "estimate", "workflow": <registry name>, "params": {...}}
     {"op": "job",    "job": <job id>,                  # non-blocking status
      "detail": <optional bool>}
@@ -52,6 +53,16 @@ flag fires, the executor stops between nodes, and the job reports status
 ``cancelled``. ``cancel`` requests the same stop explicitly for a queued
 or running job (``{"ok": true, "cancelled": <bool>}``; False when the
 job is unknown or already finished).
+
+Tenancy: a server constructed with ``tenants={id: TenantSpec}`` reads
+the frame's ``tenant`` field as the caller's identity (clients stamp it
+on every submit; see ``connect(..., tenant=)``). A submit that an
+exhausted compute quota or a workflow allowlist refuses responds
+``{"ok": false, "quota_exceeded": true, "tenant": <id>,
+"resource": <"compute_seconds"|"workflow">, "limit": <x>, "used": <y>,
+"error": ...}`` — a clean refusal with no effect, surfaced to callers
+as :class:`QuotaExceeded`. Unlike ``busy`` it is *not* retried
+automatically: the quota will not free itself.
 
 Workflows cross the wire *by registry name*: the server is constructed
 with ``registry={name: factory}`` and the client submits ``(name,
@@ -94,6 +105,31 @@ class ServerBusy(RuntimeError):
         super().__init__(
             f"admission queue full; retry in {retry_after:g}s")
         self.retry_after = float(retry_after)
+
+
+class QuotaExceeded(RuntimeError):
+    """A tenant's quota (or workflow allowlist) refused a submission.
+
+    The submit had no effect. Carries the tenant, the exhausted
+    ``resource`` (``"compute_seconds"`` or ``"workflow"``), and — for
+    metered resources — the ``limit``/``used`` pair. On the wire it
+    travels as the ``quota_exceeded`` response shape documented in the
+    module docstring; clients re-raise it and never auto-retry (unlike
+    ``busy``, waiting cannot help).
+    """
+
+    def __init__(self, tenant: str, resource: str,
+                 limit: float | None = None, used: float | None = None,
+                 detail: str | None = None):
+        msg = detail or (
+            f"tenant {tenant!r} exceeded {resource} quota"
+            + (f" (limit {limit:g}, used {used:g})"
+               if limit is not None and used is not None else ""))
+        super().__init__(msg)
+        self.tenant = tenant
+        self.resource = resource
+        self.limit = limit
+        self.used = used
 
 
 def send_msg(sock: socket.socket, obj: Any) -> None:

@@ -33,10 +33,17 @@ submission's signature set, so it can do better than contention:
 
 The scheduler is pure policy: it owns no locks and mutates nothing but
 its multiplicity map. The server drives it under the server lock.
+
+Multi-tenant fairness (``schedule="fair"``) layers
+:class:`TenantScheduler` *on top of* this order: a weighted-fair pass
+picks which tenant's turn it is (deficit/virtual-time round-robin over
+served compute seconds), then :class:`PrefixScheduler` picks
+shared-prefix-first *within* that tenant's queue. Cross-tenant fairness
+and intra-tenant reuse compose instead of competing.
 """
 from __future__ import annotations
 
-from typing import Iterable, Protocol, Sequence
+from typing import Iterable, Mapping, Protocol, Sequence
 
 
 class _SchedJob(Protocol):
@@ -177,3 +184,129 @@ class PrefixScheduler:
             if best_key is None or key < best_key:
                 best, best_key = job, key
         return best
+
+
+class TenantScheduler:
+    """Weighted fair share across tenants, prefix-first within each.
+
+    A virtual-time variant of deficit round robin: every tenant carries
+    a meter of compute seconds served (plus a provisional charge for its
+    jobs currently in flight), and each dispatch goes to the backlogged
+    tenant with the smallest ``meter / weight`` — so over any interval
+    in which a set of tenants stays backlogged, their served
+    compute-seconds converge to the ratio of their weights, and a
+    zero-backlog tenant's unused share redistributes instead of idling
+    a slot (work-conserving). *Within* the chosen tenant's queue the
+    wrapped :class:`PrefixScheduler` keeps the shared-prefix-first
+    order, so fairness costs none of the reuse scheduling.
+
+    Charging protocol (driven by the server under its lock):
+    ``note_dispatch(job)`` adds a provisional estimate when a job leaves
+    the queue — without it, K concurrent slots could all go to the
+    lowest-meter tenant before any job finishes — and
+    ``note_finish(job, seconds)`` replaces the estimate with the
+    measured compute seconds. The provisional estimate is an EWMA of
+    completed job durations (tenant-agnostic; it only needs to be the
+    same order of magnitude as real jobs to keep concurrent dispatch
+    honest).
+
+    The multiplicity surface (``add`` / ``remove`` / ``multiplicity`` /
+    ``is_live``) delegates to the wrapped scheduler unchanged: OMP
+    amortization and eviction vetoes stay fleet-wide — reuse across
+    tenants is the point of sharing the substrate; only *dispatch* is
+    divided fairly.
+    """
+
+    mode = "fair"
+
+    def __init__(self, inner: PrefixScheduler,
+                 weights: Mapping[str, float] | None = None):
+        """Wrap ``inner``; ``weights`` maps tenant id → fair-share
+        weight (missing tenants use the ``"*"`` entry, then 1.0)."""
+        self.inner = inner
+        self.store = inner.store
+        self.cost_model = inner.cost_model
+        self.weights = dict(weights or {})
+        self._served: dict[str, float] = {}
+        self._inflight: dict[int, tuple[str, float]] = {}
+        self._avg_s = 1.0        # EWMA of measured job compute seconds
+        self._n_done = 0
+
+    # -- multiplicity surface (delegated; fleet-wide on purpose) -----------
+    def add(self, job) -> None:
+        """Track a newly submitted job's signatures (fleet-wide map)."""
+        self.inner.add(job)
+
+    def remove(self, job) -> None:
+        """Drop a finished job's signatures from the live map."""
+        self.inner.remove(job)
+
+    def multiplicity(self, sig: str) -> int:
+        """Live submissions that need ``sig`` — across all tenants."""
+        return self.inner.multiplicity(sig)
+
+    def is_live(self, sig: str) -> bool:
+        """Eviction veto, tenant-agnostic: any live submission counts."""
+        return self.inner.is_live(sig)
+
+    # -- fair-share accounting ---------------------------------------------
+    def weight_of(self, tenant: str) -> float:
+        """Fair-share weight for ``tenant`` (``"*"`` default, else 1)."""
+        w = self.weights.get(tenant)
+        if w is None:
+            w = self.weights.get("*", 1.0)
+        return max(float(w), 1e-9)
+
+    def virtual_time(self, tenant: str) -> float:
+        """``(served + provisional in-flight) / weight`` — the fair
+        queueing clock this scheduler equalizes across tenants."""
+        meter = self._served.get(tenant, 0.0)
+        meter += sum(est for t, est in self._inflight.values()
+                     if t == tenant)
+        return meter / self.weight_of(tenant)
+
+    def served_seconds(self, tenant: str) -> float:
+        """Measured compute seconds served to ``tenant`` so far."""
+        return self._served.get(tenant, 0.0)
+
+    def note_dispatch(self, job, est_s: float | None = None) -> None:
+        """Charge a provisional estimate while ``job`` runs."""
+        tenant = getattr(job, "tenant", "default")
+        est = float(est_s) if est_s and est_s > 0 else self._avg_s
+        self._inflight[job.id] = (tenant, est)
+
+    def note_finish(self, job, seconds: float) -> None:
+        """Replace ``job``'s provisional charge with measured seconds."""
+        ent = self._inflight.pop(job.id, None)
+        tenant = ent[0] if ent else getattr(job, "tenant", "default")
+        seconds = max(float(seconds), 0.0)
+        self._served[tenant] = self._served.get(tenant, 0.0) + seconds
+        if seconds > 0:
+            self._n_done += 1
+            alpha = 0.3 if self._n_done > 3 else 1.0 / self._n_done
+            self._avg_s += alpha * (seconds - self._avg_s)
+
+    def snapshot(self) -> dict:
+        """Per-tenant fairness state for ``status()`` (JSON-safe)."""
+        tenants = set(self._served) | {t for t, _ in
+                                       self._inflight.values()}
+        return {t: {"served_s": self._served.get(t, 0.0),
+                    "weight": self.weight_of(t),
+                    "virtual_time": self.virtual_time(t)}
+                for t in sorted(tenants)}
+
+    # -- dispatch policy ---------------------------------------------------
+    def pick(self, queued: Sequence, inflight: Iterable[str]):
+        """Pick the lowest-virtual-time backlogged tenant's best job.
+
+        Ties break by tenant id so replays are deterministic. Returns
+        None iff ``queued`` is empty.
+        """
+        if not queued:
+            return None
+        by_tenant: dict[str, list] = {}
+        for job in queued:
+            by_tenant.setdefault(getattr(job, "tenant", "default"),
+                                 []).append(job)
+        tenant = min(by_tenant, key=lambda t: (self.virtual_time(t), t))
+        return self.inner.pick(by_tenant[tenant], inflight)

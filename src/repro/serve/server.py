@@ -58,8 +58,11 @@ from ..core.signature import compute_chunk_signatures, compute_signatures
 from ..core.store import Store
 from ..core.workflow import Workflow
 from .pool import SharedWorkerPool
-from .protocol import ServerBusy, jsonable, recv_msg, send_msg
-from .scheduler import PrefixScheduler
+from .protocol import (QuotaExceeded, ServerBusy, jsonable, recv_msg,
+                       send_msg)
+from .scheduler import PrefixScheduler, TenantScheduler
+from .tenancy import (ScopedLedger, TenantQuota, TenantSpec,
+                      resolve_tenant, validate_params)
 
 
 class SharedNonces:
@@ -137,6 +140,10 @@ class Job:
     # blocked/unblocked tiers. The search driver marks promoted rungs so
     # survivors outrank fresh exploratory arms.
     priority: int = 0
+    # Submitting tenant (the wire frame's ``tenant`` field). Drives
+    # fair-share accounting, quota ledgers, and the tenant-scoped
+    # storage budget; "default" when tenancy is not configured.
+    tenant: str = "default"
 
     @property
     def queued_seconds(self) -> float:
@@ -169,8 +176,31 @@ class SessionServer:
         executors draw from (default: ``max(n_sessions, max_workers)``).
     ``schedule``
         ``"prefix"`` (shared-prefix-first with sibling deferral — the
-        point of this server) or ``"fifo"`` (arrival order, PR 2's
-        lease-contention-only behavior, kept as the benchmark baseline).
+        point of this server), ``"fifo"`` (arrival order, PR 2's
+        lease-contention-only behavior, kept as the benchmark
+        baseline), or ``"fair"`` (weighted fair share across tenants
+        with prefix-first order *within* each tenant's turn — see
+        :class:`~repro.serve.scheduler.TenantScheduler`; weights come
+        from ``tenants``).
+    ``tenants``
+        ``{tenant id: TenantSpec}`` enabling multi-tenant isolation:
+        per-tenant fair-share weights, storage/compute quotas, and
+        workflow allowlists (``"*"`` is the catch-all spec; without it,
+        unknown tenants are refused). Usage is metered in a
+        transactional per-tenant ledger (``tenants.json`` next to the
+        store ledger) and each job's materializations run against a
+        :class:`~repro.serve.tenancy.ScopedLedger`, so a
+        quota-exhausted tenant is refused cleanly — never satisfied by
+        evicting another tenant's entries. ``None`` (default) disables
+        tenancy: every submission is the ``"default"`` tenant,
+        unmetered.
+    ``param_schemas``
+        ``{workflow name: {param: constraint}}`` submission-time
+        validation (see :func:`~repro.serve.tenancy.validate_params`):
+        a schema is an allowlist — named params are checked against
+        their type/range/choices constraint, unnamed ones are rejected
+        before the registry factory runs. Workflows without a schema
+        accept any params (opt-in per workflow).
     ``share_nondet``
         Pin one nonce map server-wide so identical nondeterministic
         operators are shared across clients (see :class:`SharedNonces`).
@@ -253,6 +283,9 @@ class SessionServer:
                  evict_to_admit: bool = UNSET,
                  remote: RemoteStore | ObjectStore | str | None = UNSET,
                  nonces: SharedNonces | None = None,
+                 tenants: Mapping[str, TenantSpec] | None = None,
+                 param_schemas: Mapping[str, Mapping[str, Any]]
+                 | None = None,
                  max_queue: int | None = UNSET,
                  busy_retry_after: float = UNSET,
                  job_timeout: float | None = UNSET,
@@ -341,8 +374,27 @@ class SessionServer:
         self.nonces: SharedNonces | None = \
             nonces if nonces is not None \
             else (SharedNonces() if eng.share_nondet else None)
-        self.scheduler = PrefixScheduler(self.store, self.cost_model,
-                                         mode=eng.schedule)
+        # Tenancy: spec table, transactional usage ledger, per-workflow
+        # param schemas, and the eviction audit log the isolation
+        # harness asserts over. All None/empty when tenancy is off.
+        self.tenants: dict[str, TenantSpec] | None = \
+            dict(tenants) if tenants is not None else None
+        self.param_schemas = dict(param_schemas or {})
+        self.quota: TenantQuota | None = None
+        if self.tenants is not None:
+            self.quota = TenantQuota(os.path.join(workdir, "store",
+                                                  "tenants.json"))
+        self.eviction_log: list[dict] = []
+        # "fair" wraps the prefix scheduler: cross-tenant weighted fair
+        # share outside, shared-prefix-first inside each tenant's turn.
+        inner_mode = "prefix" if eng.schedule == "fair" else eng.schedule
+        inner_sched = PrefixScheduler(self.store, self.cost_model,
+                                      mode=inner_mode)
+        if eng.schedule == "fair":
+            weights = {t: s.weight for t, s in (self.tenants or {}).items()}
+            self.scheduler = TenantScheduler(inner_sched, weights)
+        else:
+            self.scheduler = inner_sched
         # Signatures sibling *hosts* also want (multi-host drivers feed
         # this via share_across; the live multiplicity map below only
         # covers this host's own submissions).
@@ -360,7 +412,8 @@ class SessionServer:
             # never trigger eviction, and reports should carry the
             # documented "empty when eviction off" shape.
             self.evictor = Evictor(self.store, cost_model=self.cost_model,
-                                   live_multiplicity=self.scheduler.is_live)
+                                   live_multiplicity=self.scheduler.is_live,
+                                   on_evict=self._note_eviction)
 
         self._cv = threading.Condition()
         self._jobs: dict[str, Job] = {}
@@ -415,11 +468,27 @@ class SessionServer:
                 self.gc_stats["runs"] += 1
                 self.gc_stats["reclaimed"] += int(n)
 
+    def _note_eviction(self, sig: str, ent: dict, freed: float) -> None:
+        """Eviction audit observer (``Evictor(on_evict=...)``).
+
+        Records every successful eviction together with the evicted
+        signature's *live* state at eviction time — the tenant-isolation
+        harness asserts this log never contains a live entry (and the
+        store's lease-respecting delete already makes pinned/computing
+        entries unevictable), turning "no cross-tenant eviction of
+        live/pinned entries" from a claim into a checked invariant.
+        """
+        self.eviction_log.append({
+            "sig": str(sig), "nbytes": float(freed),
+            "live": bool(self.scheduler.is_live(sig)),
+        })
+
     # -- submission --------------------------------------------------------
     def submit(self, workflow: Workflow | Callable[[], Workflow], *,
                name: str | None = None,
                timeout: float | None = None,
-               priority: int = 0) -> Job:
+               priority: int = 0,
+               tenant: str = "default") -> Job:
         """Submit a workflow (or a zero-arg factory) for execution.
 
         Compiles it immediately — under the server's shared nonce map —
@@ -434,7 +503,17 @@ class SessionServer:
         :class:`~repro.serve.protocol.ServerBusy` when the bounded
         admission queue (``max_queue``) is full — the submission had no
         effect and is safe to retry.
+
+        With tenancy configured, ``tenant`` names the submitting tenant
+        (resolved against the ``tenants`` table; unknown tenants raise
+        :class:`PermissionError`) and an exhausted compute-seconds quota
+        raises :class:`~repro.serve.protocol.QuotaExceeded` here, at
+        admission — a clean refusal with no effect, never a hang.
         """
+        spec: TenantSpec | None = None
+        if self.tenants is not None:
+            spec = resolve_tenant(self.tenants, tenant)
+            self.quota.check_compute(tenant, spec)
         wf = workflow if isinstance(workflow, Workflow) else workflow()
         dag = wf.build()
         sigs = frozenset(
@@ -452,7 +531,8 @@ class SessionServer:
                       submitted_at=time.perf_counter(),
                       timeout=timeout if timeout is not None
                       else self.job_timeout,
-                      priority=int(priority))
+                      priority=int(priority),
+                      tenant=str(tenant))
             self._jobs[job.id] = job
             self._queue.append(job)
             self.scheduler.add(job)
@@ -462,16 +542,37 @@ class SessionServer:
     def submit_named(self, workflow: str, params: Mapping[str, Any]
                      | None = None, *, name: str | None = None,
                      timeout: float | None = None,
-                     priority: int = 0) -> Job:
-        """Submit a registered workflow by name (the RPC path)."""
+                     priority: int = 0,
+                     tenant: str = "default") -> Job:
+        """Submit a registered workflow by name (the RPC path).
+
+        Submission-time gates, all *before* the registry factory runs:
+        the tenant's workflow allowlist (``TenantSpec.workflows``,
+        :class:`~repro.serve.protocol.QuotaExceeded` with resource
+        ``"workflow"`` on refusal), the workflow's param schema
+        (:func:`~repro.serve.tenancy.validate_params`, ``ValueError``
+        on violation), then :meth:`submit`'s compute-quota gate.
+        """
         if workflow not in self.registry:
             known = ", ".join(sorted(self.registry)) or "none"
             raise KeyError(
                 f"unknown workflow {workflow!r}; registered: {known}")
+        if self.tenants is not None:
+            spec = resolve_tenant(self.tenants, tenant)
+            if (spec.workflows is not None
+                    and workflow not in spec.workflows):
+                raise QuotaExceeded(
+                    tenant, "workflow",
+                    detail=f"tenant {tenant!r} is not allowed to submit "
+                           f"workflow {workflow!r} (allowed: "
+                           f"{', '.join(spec.workflows) or 'none'})")
+        schema = self.param_schemas.get(workflow)
+        if schema is not None:
+            validate_params(workflow, dict(params or {}), schema)
         factory = self.registry[workflow]
         wf = factory(**dict(params or {}))
         return self.submit(wf, name=name or workflow, timeout=timeout,
-                           priority=priority)
+                           priority=priority, tenant=tenant)
 
     def _materialize_workflow(self, workflow: str | Workflow
                               | Callable[[], Workflow],
@@ -696,6 +797,16 @@ class SessionServer:
                 "eviction": (self.evictor.stats.snapshot()
                              if self.evictor is not None else None),
             }
+            if self.tenants is not None:
+                snapshot["tenants"] = {
+                    "usage": self.quota.snapshot(),
+                    "fair": (self.scheduler.snapshot()
+                             if isinstance(self.scheduler,
+                                           TenantScheduler) else None),
+                    "n_evictions": len(self.eviction_log),
+                    "n_evictions_live": sum(
+                        1 for e in self.eviction_log if e["live"]),
+                }
         # Store I/O stays outside the dispatch lock: an index read must
         # never stall submits/completions behind a slow filesystem.
         # Per-tier report (used bytes, entry counts, live lease census
@@ -778,6 +889,12 @@ class SessionServer:
                 job.dispatched_at = time.perf_counter()
                 self._running[job.id] = job
                 self.dispatch_log.append(job.name)
+                if isinstance(self.scheduler, TenantScheduler):
+                    # Provisional fair-share charge while the job runs
+                    # (replaced by measured seconds at completion) — K
+                    # free slots must not all go to one tenant just
+                    # because none of its jobs finished yet.
+                    self.scheduler.note_dispatch(job)
             self._job_pool.submit(self._run_job, job)
 
     def _omp_multiplicity(self, sig: str) -> float:
@@ -787,6 +904,23 @@ class SessionServer:
         live_others = max(0, self.scheduler.multiplicity(sig) - 1)
         hist = self.cost_model.reuse_count(sig)
         return float(max(live_others, min(hist, 64.0)))
+
+    def _job_ledger(self, job: Job) -> ScopedLedger | None:
+        """Build the tenant-scoped budget ledger for one job's session.
+
+        None without tenancy (the session constructs the plain fleet
+        ledger itself). With it, the job's materializations debit both
+        the fleet ledger and its tenant's quota meter, and a tenant-side
+        refusal short-circuits evict-to-admit (see
+        :class:`~repro.serve.tenancy.ScopedLedger`).
+        """
+        if self.tenants is None:
+            return None
+        spec = resolve_tenant(self.tenants, job.tenant)
+        fleet = StorageLedger(self.store.ledger_path)
+        fleet.ensure(float(self.store.total_bytes()))
+        return ScopedLedger(fleet, self.quota, job.tenant,
+                            quota_bytes=spec.storage_bytes)
 
     def _run_job(self, job: Job) -> None:
         t0 = time.perf_counter()
@@ -816,11 +950,14 @@ class SessionServer:
                 # One shared fleet evictor (live-multiplicity veto from
                 # the scheduler); None keeps refuse-on-exhausted.
                 evictor=self.evictor,
+                # Tenant-scoped budget ledger (None without tenancy).
+                ledger=self._job_ledger(job),
                 # Observed amortization belongs to the globally-aware
-                # schedule; "fifo" keeps OMP purely static so it remains
-                # a faithful PR 2 baseline (pass horizon=K to match).
+                # schedules; "fifo" keeps OMP purely static so it
+                # remains a faithful PR 2 baseline (pass horizon=K to
+                # match).
                 multiplicity=(self._omp_multiplicity
-                              if self.scheduler.mode == "prefix"
+                              if self.scheduler.mode in ("prefix", "fair")
                               else None))
             job.report = sess.run(job.workflow, nonces=self.nonces,
                                   share_sigs=self._share_view,
@@ -841,7 +978,13 @@ class SessionServer:
             job.run_seconds = time.perf_counter() - t0
             job.finished_at = time.perf_counter()  # same base as the
             # submitted_at/dispatched_at stamps, so deltas are meaningful
+            if self.quota is not None:
+                # Meter served compute against the tenant's quota
+                # (cancelled/errored time still occupied the slot).
+                self.quota.charge_compute(job.tenant, job.run_seconds)
             with self._cv:
+                if isinstance(self.scheduler, TenantScheduler):
+                    self.scheduler.note_finish(job, job.run_seconds)
                 self._running.pop(job.id, None)
                 self.scheduler.remove(job)
                 self._retain_finished_locked(job)
@@ -1081,12 +1224,22 @@ class SessionServer:
                                             name=msg.get("name"),
                                             timeout=msg.get("timeout"),
                                             priority=int(
-                                                msg.get("priority", 0)))
+                                                msg.get("priority", 0)),
+                                            tenant=str(
+                                                msg.get("tenant",
+                                                        "default")))
                 except ServerBusy as e:
                     # Backpressure, not failure: the submit had no
                     # effect; the client should retry after the hint.
                     return {"ok": False, "busy": True,
                             "retry_after": e.retry_after,
+                            "error": str(e)}
+                except QuotaExceeded as e:
+                    # Clean per-tenant refusal: no effect, not retried
+                    # (the quota will not free itself) — see protocol.py.
+                    return {"ok": False, "quota_exceeded": True,
+                            "tenant": e.tenant, "resource": e.resource,
+                            "limit": e.limit, "used": e.used,
                             "error": str(e)}
                 return {"ok": True, "job": job.id, "name": job.name}
             if op == "estimate":

@@ -44,7 +44,8 @@ from repro.core.remote import (FsObjectStore, RemoteStore,
 from repro.core.store import Store
 from repro.core.sweep import SweepVariant, run_sweep
 from repro.core.workflow import Workflow
-from repro.serve import InProcessClient, ServerBusy, connect_unix
+from repro.serve import (FleetRouter, InProcessClient, ServerBusy,
+                         connect_unix)
 from repro.serve.server import SessionServer
 
 pytestmark = pytest.mark.skipif(
@@ -794,3 +795,156 @@ def test_gc_disabled_without_remote_or_interval(tmp_path):
     finally:
         disabled.shutdown()
         local_only.shutdown()
+
+
+# -- fleet router: shard death, failover, rebalance (ISSUE 10) ---------------
+
+def _slow_family_registry(calls, work=600, delay=0.08):
+    """One workflow: heavy counted prefix + an optional sleeping tail.
+
+    ``tail=0`` is the warm arm (prefix only, fast); ``tail=N`` appends N
+    sleeping extractors so a second submission can be killed mid-run.
+    Both share the same source node, hence the same route key — the
+    router must place them on the same shard."""
+    def build(family="x", reg=0.1, tail=0):
+        wf = Workflow(f"slow-{family}-{reg}-{tail}")
+        src = wf.source(
+            "src",
+            lambda: np.arange(4096, dtype=np.float64).reshape(64, 64),
+            config=("v1", family))
+
+        def featurize(m):
+            calls.hit(f"feat_{family}")
+            acc = m.copy()
+            for _ in range(work):
+                acc = np.tanh(acc @ m.T @ m / m.size)
+            return acc
+
+        prev = wf.extractor("feat", featurize, [src],
+                            config=("feat", family))
+        for i in range(tail):
+            prev = wf.extractor(
+                f"t{i}", lambda x, d=delay: (time.sleep(d), x)[1],
+                [prev], config=("tail", i))
+        out = wf.reducer("out", lambda m, r=reg: {"v": float(np.sum(m)) * r},
+                         [prev], config=("eval", reg))
+        wf.output(out)
+        return wf
+    return {"slow": build}
+
+
+class _Calls:
+    """Thread-safe per-node compute counters."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counts: dict[str, int] = {}
+
+    def hit(self, name: str) -> None:
+        with self._lock:
+            self.counts[name] = self.counts.get(name, 0) + 1
+
+    def get(self, name: str) -> int:
+        with self._lock:
+            return self.counts.get(name, 0)
+
+
+def test_shard_death_mid_job_fails_over_compute_once(tmp_path):
+    """Kill a shard mid-job: the router detects the shutdown-cancel,
+    fails over through the cancellation/retry path, and the job finishes
+    on the survivor — with the warm prefix *fetched* from the shared
+    remote tier, not recomputed (compute-once holds fleet-wide across
+    the failover). The survivor's ledger still matches its disk."""
+    calls = _Calls()
+    registry = _slow_family_registry(calls)
+    servers = {}
+    for sid in ("s0", "s1"):
+        servers[sid] = SessionServer(
+            str(tmp_path / sid), registry=registry,
+            remote=RemoteStore(_bucket(tmp_path)), n_sessions=1,
+            poll_interval=0.01)
+    router = FleetRouter(servers, registry=registry)
+    try:
+        # warm the prefix through the router, publish it to the remote
+        warm = router.submit("slow", {"family": "x", "reg": 0.1,
+                                      "tail": 0})
+        out = router.wait(warm, timeout=60.0)
+        assert out["status"] == "done"
+        owner = out["shard"]
+        assert calls.get("feat_x") == 1
+        servers[owner].store.writer_drain()     # uploads committed
+
+        # same prefix + a sleepy tail: routed to the same (warm) shard
+        victim = router.submit("slow", {"family": "x", "reg": 0.1,
+                                        "tail": 24})
+        assert router._jobs[victim]["shard"] == owner
+        _wait_status(servers[owner]._jobs[victim], "running")
+        time.sleep(0.2)                         # a few tail nodes in
+
+        servers[owner].shutdown(drain=False)    # the shard dies mid-job
+        out = router.wait(victim, timeout=120.0)
+        assert out["status"] == "done"
+        survivor = out["shard"]
+        assert survivor != owner
+        assert router.failovers == 1
+        assert out["outputs"]["out"]["v"] == pytest.approx(
+            float(np.sum(_slow_prefix_value())) * 0.1)
+
+        # compute-once across the failover: the survivor fetched the
+        # published prefix instead of recomputing it
+        assert calls.get("feat_x") == 1
+        # the survivor's ledger matches the bytes actually on its disk
+        assert StorageLedger(servers[survivor].store.ledger_path).used() \
+            == pytest.approx(float(servers[survivor].store.total_bytes()))
+        counts = servers[survivor].store.lease_counts()
+        assert counts == {"compute": 0, "pins": 0, "waiters": 0}
+        # the router reports the dead shard and the healthy one
+        snap = router.status()
+        assert snap["failovers"] == 1
+        assert snap["shards"][owner].get("dead") is True
+        assert snap["shards"][survivor]["accepting"]
+    finally:
+        router.close()
+        for srv in servers.values():
+            srv.shutdown()
+
+
+def _slow_prefix_value():
+    """The featurized matrix `_slow_family_registry` computes (work=600)."""
+    m = np.arange(4096, dtype=np.float64).reshape(64, 64)
+    acc = m.copy()
+    for _ in range(600):
+        acc = np.tanh(acc @ m.T @ m / m.size)
+    return acc
+
+
+def test_shard_rejoin_rebalances_only_rendezvous_moved_keys(tmp_path):
+    """Removing one of N shards re-homes only that shard's keys — an
+    expected 1/N of the keyspace — and re-adding it restores the exact
+    original placement (no other key ever moves)."""
+    servers = {f"s{i}": SessionServer(str(tmp_path / f"s{i}"),
+                                      poll_interval=0.01)
+               for i in range(4)}
+    router = FleetRouter(servers)
+    try:
+        rng = np.random.default_rng(CHAOS_SEED)
+        keys = [bytes(rng.bytes(16)).hex() for _ in range(240)]
+        before = {k: router.shard_for(k) for k in keys}
+        assert set(before.values()) == set(servers)   # all shards used
+
+        router.remove_shard("s2")
+        after = {k: router.shard_for(k) for k in keys}
+        moved = [k for k in keys if before[k] != after[k]]
+        # only s2's keys moved, and every one of them moved off s2
+        assert set(moved) == {k for k in keys if before[k] == "s2"}
+        assert all(after[k] != "s2" for k in moved)
+        # the move fraction is ~1/4 (binomial slack for 240 keys)
+        assert 0.10 <= len(moved) / len(keys) <= 0.45
+
+        router.add_shard("s2", servers["s2"])
+        restored = {k: router.shard_for(k) for k in keys}
+        assert restored == before                     # exact rebalance
+    finally:
+        router.close()
+        for srv in servers.values():
+            srv.shutdown()

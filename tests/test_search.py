@@ -79,12 +79,15 @@ def build_family(family: str, reg: float, calls: Calls | None = None,
 
 def build_train(lr: float, train_iters: int = 1,
                 calls: Calls | None = None,
-                slow_lr: float | None = None) -> Workflow:
+                slow_lr: float | None = None,
+                stall: threading.Event | None = None) -> Workflow:
     """src → feat (shared) → train(lr, iters) → eval{score}.
 
     The metric rewards larger ``lr``; ``train_iters`` is the halving
-    resource; an arm with ``lr == slow_lr`` trains slowly (the ASHA
-    straggler).
+    resource; an arm with ``lr == slow_lr`` is the ASHA straggler: it
+    blocks on ``stall`` until the test releases it, so "slow" is a
+    synchronized condition, not a wall-clock guess that races the fast
+    arms on a loaded machine.
     """
     wf = Workflow(f"train-{lr}-{train_iters}")
 
@@ -114,8 +117,11 @@ def build_train(lr: float, train_iters: int = 1,
     feat = wf.extractor("feat", featurize, [src], config=("feat",))
 
     def train(z, lr=lr, iters=train_iters):
-        if slow_lr is not None and lr == slow_lr:
-            time.sleep(2.5)
+        if slow_lr is not None and lr == slow_lr and stall is not None:
+            # The timeout is a deadlock bound, not pacing: the test
+            # sets the event as soon as the causal condition (the
+            # driver requested this arm's cancellation) holds.
+            stall.wait(timeout=60.0)
         return float(np.sum(z * z)) * lr * (1.0 + 0.01 * iters)
 
     model = wf.learner("train", train, [feat],
@@ -259,11 +265,32 @@ def test_eager_halving_cancels_straggler(tmp_path):
     never reaches rung 1, and its pins/reservations are settled (zero
     live leases, ledger == disk)."""
     calls = Calls()
+    stall = threading.Event()
     registry = {"train": lambda lr, train_iters:
-                build_train(lr, train_iters, calls=calls, slow_lr=99.0)}
+                build_train(lr, train_iters, calls=calls, slow_lr=99.0,
+                            stall=stall)}
     server = SessionServer(str(tmp_path), registry=registry,
                            engine=EngineConfig(n_sessions=3),
                            poll_interval=0.01)
+
+    def release_on_cancel():
+        # Event-synchronized straggler release: unblock the slow arm
+        # only once the driver has *requested* its cancellation — the
+        # causal condition the old fixed sleep merely guessed at — so
+        # the straggler can never finish rung 0 first, at any machine
+        # speed. The deadline is a deadlock bound for the failure case.
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline and not stall.is_set():
+            with server._cv:
+                requested = any(j.cancel_event.is_set()
+                                for j in server._jobs.values())
+            if requested:
+                break
+            time.sleep(0.01)
+        stall.set()
+
+    watcher = threading.Thread(target=release_on_cancel, daemon=True)
+    watcher.start()
     try:
         driver = SearchDriver(
             server, "train",
@@ -276,6 +303,8 @@ def test_eager_halving_cancels_straggler(tmp_path):
                                       eager=True)))
         report = driver.run()
     finally:
+        stall.set()
+        watcher.join(timeout=5.0)
         server.shutdown()
 
     assert report.n_cancelled() == 1
